@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: CSV emit, default reduced scales.
+
+The paper runs 100 samples per point on full SNAP graphs; one CPU core gets
+reduced scales + fewer samples (recorded per benchmark). Scale factors are
+encoded here so EXPERIMENTS.md can state them exactly.
+"""
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.12"))
+SAMPLES = int(os.environ.get("REPRO_BENCH_SAMPLES", "3"))
+
+
+def emit(name: str, rows: list[dict]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    # also print the table
+    if rows:
+        keys = list(rows[0].keys())
+        print(f"\n== {name} ==")
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r[k]) for k in keys))
+    return path
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0
+        return False

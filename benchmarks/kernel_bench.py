@@ -1,0 +1,59 @@
+"""Microbench: Pallas kernels (interpret mode) vs their jnp references.
+
+Interpret-mode wall-clock is NOT TPU performance — the purpose here is
+(a) proving the kernels run across shapes and (b) giving the jnp-oracle
+baseline number the §Perf iterations compare against structurally."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import emit
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def run() -> list[dict]:
+    rows = []
+    key = jax.random.key(0)
+    # lane_cumsum: DFEP step-1 rank hotspot shape (astroph-scale)
+    x = jax.random.randint(key, (393728, 20), 0, 2, dtype=jnp.int32)
+    rows.append({"name": "lane_cumsum_2E394k_K20",
+                 "kernel_us": round(_time(lambda a: ops.lane_cumsum(a), x), 1),
+                 "ref_us": round(_time(lambda a: ref.cumsum_lanes(a), x), 1)})
+    # frontier_min: ETSCH aggregation shape
+    st = jax.random.uniform(key, (20, 17903))
+    mb = jax.random.bernoulli(key, 0.3, (20, 17903))
+    rows.append({"name": "frontier_min_K20_V18k",
+                 "kernel_us": round(_time(lambda a, b: ops.frontier_min(a, b), st, mb), 1),
+                 "ref_us": round(_time(lambda a, b: ref.kreduce_min(a, b), st, mb), 1)})
+    # minplus_sweep: local relax
+    v, e = 17903, 98304
+    src = jax.random.randint(key, (e,), 0, v, dtype=jnp.int32)
+    dst = jax.random.randint(jax.random.key(1), (e,), 0, v, dtype=jnp.int32)
+    mask = jnp.ones((e,), jnp.bool_)
+    dist = jnp.where(jnp.arange(v) == 0, 0.0, jnp.inf).astype(jnp.float32)
+    rows.append({"name": "minplus_sweep_V18k_E98k",
+                 "kernel_us": round(_time(lambda d: ops.minplus_sweep(
+                     d, src, dst, mask), dist), 1),
+                 "ref_us": round(_time(lambda d: ref.minplus_relax(
+                     d, src, dst, mask), dist), 1)})
+    return rows
+
+
+def main() -> None:
+    emit("kernel_bench", run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark runner: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig9] [--fast]
+
+Emits ``name,us_per_call,derived`` CSVs under experiments/bench/ and prints
+each table. ``--fast`` shrinks scales/samples for a quick pass.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig5,fig6,fig7,fig8,fig9,kernels,moe")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    if args.fast:
+        os.environ.setdefault("REPRO_BENCH_SCALE", "0.05")
+        os.environ.setdefault("REPRO_BENCH_SAMPLES", "2")
+
+    # imports AFTER env so common.py picks the scales up
+    from . import (fig5_k_sweep, fig6_diameter, fig7_comparison,
+                   fig8_scalability, fig9_sssp, kernel_bench)
+
+    all_benches = {
+        "fig5": fig5_k_sweep.main,
+        "fig6": fig6_diameter.main,
+        "fig7": fig7_comparison.main,
+        "fig8": fig8_scalability.main,
+        "fig9": fig9_sssp.main,
+        "kernels": kernel_bench.main,
+    }
+    only = args.only.split(",") if args.only else list(all_benches)
+    for name in only:
+        t0 = time.time()
+        print(f"\n### running {name} ...", flush=True)
+        all_benches[name]()
+        print(f"### {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

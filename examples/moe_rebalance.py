@@ -1,0 +1,33 @@
+"""Beyond-paper demo: DFEP-balanced MoE expert placement (DESIGN.md §4).
+
+Simulates Zipf-skewed routing, runs DFEP on the expert co-activation graph,
+and reports the shard-load imbalance before/after re-placement.
+
+    PYTHONPATH=src python examples/moe_rebalance.py
+"""
+import numpy as np
+
+from repro.core import moe_dfep
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    e, k, t = 64, 8, 20000
+    p = 1.0 / (np.arange(e) + 1.0) ** 1.1
+    p /= p.sum()
+    first = rng.choice(e, size=t, p=p)
+    second = (first + rng.choice([1, 2, 3, 5], size=t)) % e
+    eidx = np.stack([first, second], 1)
+    loads = np.bincount(eidx.reshape(-1), minlength=e).astype(float)
+
+    naive = moe_dfep.naive_imbalance(loads, k)
+    placement = moe_dfep.place_experts(eidx, n_experts=e, k=k, seed=0)
+    print(f"experts={e} shards={k} tokens={t}")
+    print(f"naive contiguous placement: max/mean load = {naive:.3f}")
+    print(f"DFEP-balanced placement:    max/mean load = "
+          f"{placement.imbalance:.3f}")
+    print(f"per-shard load: {placement.shard_load.astype(int).tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Sharded checkpointing: per-leaf .npy blobs + JSON manifest, async writer,
+atomic publish, resume-from-latest, and elastic re-shard on load.
+
+Design for 1000+ nodes (DESIGN.md §6): every host writes only its local
+shards (here: single-host writes all), the manifest carries the logical
+spec tree so a restart onto a *different* mesh reshards transparently —
+arrays are written unsharded-logical (gathered) in this reference
+implementation, and re-placed through jax.device_put with the target
+sharding on load.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):            # match jax.tree's dict-key sorting
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        flat = _flatten(tree)
+        # snapshot to host memory first (cheap on CPU; device->host on TPU)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        self.wait()                      # never two writers in flight
+        if self.async_write and not blocking:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def _write(self, step: int, host: dict) -> None:
+        tmp = os.path.join(self.dir, f".tmp-{step}-{threading.get_ident()}-{time.time_ns()}")
+        final = os.path.join(self.dir, f"step-{step:09d}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {}
+        for k, v in host.items():
+            fn = k.replace("/", "__") + ".npy"
+            dtype_name = str(v.dtype)
+            if v.dtype.kind == "V" or dtype_name == "bfloat16":
+                # numpy can't round-trip ml_dtypes (bf16 etc.): store raw bits
+                np.save(os.path.join(tmp, fn),
+                        v.view(f"u{v.dtype.itemsize}"))
+                dtype_name = "bfloat16" if v.dtype.itemsize == 2 else dtype_name
+            else:
+                np.save(os.path.join(tmp, fn), v)
+            manifest[k] = {"file": fn, "shape": list(v.shape),
+                           "dtype": dtype_name}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "leaves": manifest,
+                       "time": time.time()}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)            # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step-{s:09d}"),
+                          ignore_errors=True)
+
+    # -- load ---------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step-"):
+                out.append(int(d.split("-")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.all_steps()
+        return s[-1] if s else None
+
+    def restore(self, template: Any, step: int | None = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``template``. With ``shardings``
+        (matching pytree of jax.sharding.Sharding) arrays are placed sharded
+        — this is the elastic re-shard path: the target mesh may differ from
+        the one that wrote the checkpoint."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        base = os.path.join(self.dir, f"step-{step:09d}")
+        with open(os.path.join(base, "manifest.json")) as f:
+            manifest = json.load(f)["leaves"]
+        flat_t = _flatten(template)
+        flat_s = _flatten(shardings) if shardings is not None else {}
+        loaded = {}
+        for k, tmpl in flat_t.items():
+            info = manifest[k]
+            arr = np.load(os.path.join(base, info["file"]))
+            if info["dtype"] == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            assert list(arr.shape) == list(tmpl.shape), (k, arr.shape, tmpl.shape)
+            if k in flat_s and flat_s[k] is not None:
+                loaded[k] = jax.device_put(arr, flat_s[k])
+            else:
+                loaded[k] = jnp.asarray(arr)
+        # unflatten along template structure
+        leaves_t, treedef = jax.tree.flatten(
+            template, is_leaf=lambda x: hasattr(x, "shape"))
+        keys = list(_flatten(template).keys())
+        return treedef.unflatten([loaded[k] for k in keys])

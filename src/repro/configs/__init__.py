@@ -1,0 +1,43 @@
+"""Config registry: one module per assigned architecture (+ smoke variants)."""
+from __future__ import annotations
+
+import importlib
+
+from .base import SHAPES, MlaConfig, ModelConfig, MoeConfig, ShapeConfig, SsmConfig  # noqa: F401
+
+ARCHS = (
+    "jamba_v01_52b",
+    "falcon_mamba_7b",
+    "qwen3_4b",
+    "qwen2_1_5b",
+    "granite_3_2b",
+    "qwen3_0_6b",
+    "llava_next_34b",
+    "whisper_small",
+    "qwen2_moe_a2_7b",
+    "deepseek_v2_236b",
+)
+
+# canonical external ids (--arch <id>)
+ARCH_IDS = {
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "qwen3-4b": "qwen3_4b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "granite-3-2b": "granite_3_2b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "llava-next-34b": "llava_next_34b",
+    "whisper-small": "whisper_small",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod_name = ARCH_IDS.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_archs() -> list[str]:
+    return list(ARCH_IDS)

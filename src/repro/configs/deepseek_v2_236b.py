@@ -1,0 +1,21 @@
+"""deepseek-v2-236b [moe]: 60L d_model=5120 128H d_ff(expert)=1536
+vocab=102400, MLA kv_lora=512, 2 shared + 160 routed top-6
+[arXiv:2405.04434]. first_k_dense_replace=1 approximated as MoE throughout
+for scan homogeneity (+0.03% params; DESIGN.md §7). Full attention ->
+long_500k skipped."""
+from .base import MlaConfig, ModelConfig, MoeConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b", family="moe", n_layers=60, d_model=5120,
+    n_heads=128, n_kv=128, d_ff=12288, vocab=102400, d_head=192,
+    mla=MlaConfig(kv_lora=512, q_lora=1536, rope_head_dim=64,
+                  v_head_dim=128, nope_head_dim=128),
+    moe=MoeConfig(n_experts=160, top_k=6, n_shared=2, d_ff_expert=1536,
+                  every=1))
+
+SMOKE = ModelConfig(
+    name="deepseek-v2-smoke", family="moe", n_layers=4, d_model=128,
+    n_heads=4, n_kv=4, d_ff=256, vocab=512, d_head=48,
+    mla=MlaConfig(kv_lora=64, q_lora=96, rope_head_dim=16, v_head_dim=32,
+                  nope_head_dim=32),
+    moe=MoeConfig(n_experts=8, top_k=2, n_shared=1, d_ff_expert=64, every=1))

@@ -1,0 +1,18 @@
+"""jamba-v0.1-52b [hybrid]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2 — Mamba+attn 1:7 interleave, MoE every other
+layer [arXiv:2403.19887]. Hybrid (mostly SSM) -> long_500k RUNS (its 4
+attention layers use the sequence-sharded cache)."""
+from .base import ModelConfig, MoeConfig, SsmConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid", n_layers=32, d_model=4096,
+    n_heads=32, n_kv=8, d_ff=14336, vocab=65536, d_head=128,
+    attn_period=8,
+    moe=MoeConfig(n_experts=16, top_k=2, every=2),
+    ssm=SsmConfig(d_state=16, d_conv=4, expand=2), sub_quadratic=True)
+
+SMOKE = ModelConfig(
+    name="jamba-smoke", family="hybrid", n_layers=8, d_model=128, n_heads=4,
+    n_kv=2, d_ff=256, vocab=512, d_head=32, attn_period=4,
+    moe=MoeConfig(n_experts=4, top_k=2, every=2),
+    ssm=SsmConfig(d_state=8, d_conv=4, expand=2), sub_quadratic=True)

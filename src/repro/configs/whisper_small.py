@@ -1,0 +1,16 @@
+"""whisper-small [audio]: 12L enc + 12L dec, d_model=768 12H d_ff=3072
+vocab=51865 — enc-dec, conv frontend STUB (input_specs() provides
+precomputed frame embeddings, 1500 frames = 30 s) [arXiv:2212.04356].
+Enc-dec (not encoder-only) -> decode shapes run on the decoder.
+12 heads pad to 16 (MHA) on tp=16. Full attention -> long_500k skipped."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="encdec", n_layers=12, d_model=768,
+    n_heads=12, n_kv=12, d_ff=3072, vocab=51865, d_head=64,
+    n_enc_layers=12, enc_seq=1500)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke", family="encdec", n_layers=2, d_model=128,
+    n_heads=4, n_kv=4, d_ff=256, vocab=512, d_head=32,
+    n_enc_layers=2, enc_seq=64)

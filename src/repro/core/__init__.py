@@ -1,0 +1,6 @@
+"""Core contribution of the paper: edge partitioning (DFEP) + the ETSCH
+edge-partitioned graph-processing framework."""
+from . import algorithms, baselines, dfep, etsch, graph, metrics  # noqa: F401
+from .dfep import DfepConfig, partition, run_dfep  # noqa: F401
+from .etsch import Partitioning, compile_partitioning, run_etsch  # noqa: F401
+from .graph import Graph, from_edge_array, load_dataset  # noqa: F401

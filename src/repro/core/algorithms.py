@@ -1,0 +1,347 @@
+"""Concrete ETSCH problems (paper Algorithms 1–2 + the two it sketches) and
+whole-graph vertex-centric references used both as correctness oracles and as
+the paper's baseline for the *gain* metric.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .etsch import (EtschResult, Partitioning, Problem, min_relax_sweep,
+                    run_etsch)
+from .graph import Graph
+
+INF = jnp.float32(jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: single-source shortest paths (unit weights)
+# ---------------------------------------------------------------------------
+
+def _sssp_init(part: Partitioning, *, source: jax.Array) -> jax.Array:
+    st = jnp.where(part.member, INF, INF)
+    src_col = (jnp.arange(part.n_vertices) == source)[None, :]
+    return jnp.where(part.member & src_col, 0.0, st)
+
+
+SSSP = Problem(
+    init=_sssp_init,
+    local_sweep=min_relax_sweep,
+    reduce=lambda st: jnp.min(st, axis=0),
+    identity=jnp.inf,
+    mode="replica",
+)
+
+
+def etsch_sssp(part: Partitioning, source: int | jax.Array) -> EtschResult:
+    return run_etsch(part, SSSP, source=jnp.asarray(source, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: connected components (random ids -> epidemic min)
+# ---------------------------------------------------------------------------
+
+def _cc_init(part: Partitioning, *, key: jax.Array) -> jax.Array:
+    ids = jax.random.permutation(key, part.n_vertices).astype(jnp.float32)
+    return jnp.where(part.member, ids[None, :], INF)
+
+
+def _cc_sweep(part: Partitioning, state: jax.Array) -> jax.Array:
+    return min_relax_sweep(part, state, edge_cost=0.0)
+
+
+CC = Problem(
+    init=_cc_init,
+    local_sweep=_cc_sweep,
+    reduce=lambda st: jnp.min(st, axis=0),
+    identity=jnp.inf,
+    mode="replica",
+)
+
+
+def etsch_cc(part: Partitioning, key: jax.Array | int = 0) -> EtschResult:
+    if isinstance(key, int):
+        key = jax.random.key(key)
+    return run_etsch(part, CC, key=key)
+
+
+# ---------------------------------------------------------------------------
+# PageRank over an edge partitioning (sum-aggregation; paper §III sketch)
+# ---------------------------------------------------------------------------
+
+class PageRankResult(NamedTuple):
+    rank: jax.Array
+    supersteps: jax.Array
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def etsch_pagerank(part: Partitioning, degrees: jax.Array, iters: int = 30,
+                   damping: float = 0.85) -> PageRankResult:
+    """Each superstep: partitions compute *partial* in-flows over their own
+    edges; frontier aggregation sums the partials (each edge lives in exactly
+    one partition, so the sum is exact)."""
+    v_n = part.n_vertices
+    rank = jnp.full((v_n,), 1.0 / v_n, jnp.float32)
+    deg = jnp.maximum(degrees.astype(jnp.float32), 1.0)
+    rows = jnp.arange(part.k)[:, None]
+
+    def step(rank, _):
+        contrib = rank / deg                                       # [V]
+        cu = jnp.where(part.mask, contrib[part.src], 0.0)          # [K, E]
+        cv = jnp.where(part.mask, contrib[part.dst], 0.0)
+        partial_in = jnp.zeros((part.k, v_n), jnp.float32)
+        partial_in = partial_in.at[rows, part.dst].add(cu)         # u -> v
+        partial_in = partial_in.at[rows, part.src].add(cv)         # v -> u
+        inflow = jnp.sum(partial_in, axis=0)                       # aggregation
+        new = (1.0 - damping) / v_n + damping * inflow
+        return new, None
+
+    rank, _ = jax.lax.scan(step, rank, None, length=iters)
+    return PageRankResult(rank, jnp.int32(iters))
+
+
+# ---------------------------------------------------------------------------
+# Luby maximal independent set (paper §III: "also possible in ETSCH")
+# ---------------------------------------------------------------------------
+
+class MisResult(NamedTuple):
+    in_set: jax.Array       # [V] bool
+    supersteps: jax.Array
+
+
+@partial(jax.jit, static_argnames=("max_supersteps",))
+def etsch_mis(part: Partitioning, key: jax.Array,
+              max_supersteps: int = 256) -> MisResult:
+    """Luby's algorithm: local phase spreads random priorities along
+    partition edges; aggregation takes the min over replicas; vertices that
+    beat every undecided neighbour join the set, their neighbours drop out."""
+    v_n = part.n_vertices
+    prio = jax.random.uniform(key, (v_n,), jnp.float32, 1e-6, 1.0)
+    # status: 0 undecided / 1 in set / 2 excluded
+    status0 = jnp.zeros((v_n,), jnp.int32)
+    rows = jnp.arange(part.k)[:, None]
+
+    def superstep(carry):
+        status, steps, _ = carry
+        undecided = status == 0
+        p = jnp.where(undecided, prio, INF)                        # [V]
+        # local phase: min undecided-neighbour priority over partition edges
+        mn = jnp.full((part.k, v_n), INF)
+        pu = jnp.where(part.mask, p[part.src], INF)
+        pv = jnp.where(part.mask, p[part.dst], INF)
+        mn = mn.at[rows, part.dst].min(pu)
+        mn = mn.at[rows, part.src].min(pv)
+        min_nbr = jnp.min(mn, axis=0)                              # aggregation
+        join = undecided & (p < min_nbr)
+        # second half-superstep: neighbours of joiners are excluded
+        j = join.astype(jnp.float32)
+        ex = jnp.zeros((part.k, v_n), jnp.float32)
+        ex = ex.at[rows, part.dst].max(jnp.where(part.mask, j[part.src], 0.0))
+        ex = ex.at[rows, part.src].max(jnp.where(part.mask, j[part.dst], 0.0))
+        excluded = jnp.max(ex, axis=0) > 0                         # aggregation
+        new_status = jnp.where(join, 1, status)
+        new_status = jnp.where(excluded & (new_status == 0), 2, new_status)
+        changed = jnp.any(new_status != status)
+        return new_status, steps + 1, changed
+
+    def cond(carry):
+        status, steps, changed = carry
+        return changed & (steps < max_supersteps)
+
+    status, steps, _ = jax.lax.while_loop(
+        cond, superstep, (status0, jnp.int32(0), jnp.bool_(True)))
+    return MisResult(status == 1, steps)
+
+
+# ---------------------------------------------------------------------------
+# Whole-graph vertex-centric references (correctness oracles + gain baseline)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def reference_sssp(g: Graph, source) -> tuple[jax.Array, jax.Array]:
+    """Pregel-style BFS: one relaxation hop per round. Returns (dist, rounds).
+    ``rounds`` is the vertex-centric superstep count the paper's *gain*
+    compares against."""
+    dist0 = jnp.full((g.n_vertices,), INF).at[source].set(0.0)
+
+    def body(carry):
+        d, r, _ = carry
+        du = jnp.where(g.edge_mask, d[g.src] + 1.0, INF)
+        dv = jnp.where(g.edge_mask, d[g.dst] + 1.0, INF)
+        nd = d.at[g.dst].min(du).at[g.src].min(dv)
+        return nd, r + 1, jnp.any(nd != d)
+
+    def cond(carry):
+        _, r, changed = carry
+        return changed & (r < g.n_vertices)
+
+    d, r, _ = jax.lax.while_loop(cond, body, (dist0, jnp.int32(0), jnp.bool_(True)))
+    return d, r
+
+
+@jax.jit
+def reference_cc(g: Graph) -> tuple[jax.Array, jax.Array]:
+    label0 = jnp.arange(g.n_vertices, dtype=jnp.float32)
+
+    def body(carry):
+        l, r, _ = carry
+        lu = jnp.where(g.edge_mask, l[g.src], INF)
+        lv = jnp.where(g.edge_mask, l[g.dst], INF)
+        nl = l.at[g.dst].min(lu).at[g.src].min(lv)
+        return nl, r + 1, jnp.any(nl != l)
+
+    def cond(carry):
+        _, r, changed = carry
+        return changed & (r < g.n_vertices)
+
+    l, r, _ = jax.lax.while_loop(cond, body, (label0, jnp.int32(0), jnp.bool_(True)))
+    return l, r
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def reference_pagerank(g: Graph, iters: int = 30, damping: float = 0.85):
+    v_n = g.n_vertices
+    deg = jnp.maximum(g.degrees().astype(jnp.float32), 1.0)
+    rank = jnp.full((v_n,), 1.0 / v_n, jnp.float32)
+
+    def step(rank, _):
+        c = rank / deg
+        inflow = (jnp.zeros_like(rank)
+                  .at[g.dst].add(jnp.where(g.edge_mask, c[g.src], 0.0))
+                  .at[g.src].add(jnp.where(g.edge_mask, c[g.dst], 0.0)))
+        return (1.0 - damping) / v_n + damping * inflow, None
+
+    rank, _ = jax.lax.scan(step, rank, None, length=iters)
+    return rank
+
+
+def is_independent_set(g: Graph, in_set: jax.Array) -> jax.Array:
+    both = in_set[g.src] & in_set[g.dst] & g.edge_mask
+    return ~jnp.any(both)
+
+
+def is_maximal_independent_set(g: Graph, in_set: jax.Array) -> jax.Array:
+    nbr_in = (jnp.zeros(g.n_vertices, jnp.bool_)
+              .at[g.dst].max(in_set[g.src] & g.edge_mask)
+              .at[g.src].max(in_set[g.dst] & g.edge_mask))
+    covered = in_set | nbr_in
+    deg = g.degrees() > 0
+    return is_independent_set(g, in_set) & jnp.all(covered | ~deg)
+
+
+# ---------------------------------------------------------------------------
+# Multi-source distances (building block for betweenness centrality — the
+# paper motivates distance computation via Brandes §III) — one ETSCH run
+# computes distances from S sources simultaneously (state [K, S, V]).
+# ---------------------------------------------------------------------------
+
+class MultiSsspResult(NamedTuple):
+    dist: jax.Array         # [S, V]
+    supersteps: jax.Array
+
+
+@partial(jax.jit, static_argnames=("max_supersteps",))
+def etsch_multi_sssp(part: Partitioning, sources: jax.Array,
+                     max_supersteps: int = 512) -> MultiSsspResult:
+    """Distances from every source in ``sources`` [S] at once; the frontier
+    aggregation reconciles an [S, V] replica block per partition."""
+    v_n = part.n_vertices
+    n_src = sources.shape[0]
+    rows = jnp.arange(part.k)[:, None, None]
+    is_src = sources[:, None] == jnp.arange(v_n)[None, :]      # [S, V]
+    member = part.member[:, None, :]                           # [K, 1, V]
+    dist0 = jnp.where(member & is_src[None], 0.0, INF)         # [K, S, V]
+
+    def local_sweep(d):
+        du = jnp.where(part.mask[:, None, :],
+                       d[rows, jnp.arange(n_src)[None, :, None],
+                         part.src[:, None, :]] + 1.0, INF)
+        dv = jnp.where(part.mask[:, None, :],
+                       d[rows, jnp.arange(n_src)[None, :, None],
+                         part.dst[:, None, :]] + 1.0, INF)
+        d = d.at[rows, jnp.arange(n_src)[None, :, None],
+                 part.dst[:, None, :]].min(du)
+        d = d.at[rows, jnp.arange(n_src)[None, :, None],
+                 part.src[:, None, :]].min(dv)
+        return d
+
+    def local_fixpoint(d):
+        def body(c):
+            dd, _ = c
+            nd = local_sweep(dd)
+            return nd, jnp.any(nd != dd)
+        d, _ = jax.lax.while_loop(lambda c: c[1], body, (d, jnp.bool_(True)))
+        return d
+
+    def superstep(carry):
+        d, steps, _ = carry
+        d1 = local_fixpoint(d)
+        agg = jnp.min(d1, axis=0)                              # [S, V]
+        d2 = jnp.where(member, agg[None], INF)
+        return d2, steps + 1, jnp.any(d2 != d)
+
+    def cond(carry):
+        return carry[2] & (carry[1] < max_supersteps)
+
+    d, steps, _ = jax.lax.while_loop(
+        cond, superstep, (dist0, jnp.int32(0), jnp.bool_(True)))
+    return MultiSsspResult(jnp.min(d, axis=0), steps)
+
+
+# ---------------------------------------------------------------------------
+# k-core decomposition (iterative peeling) on ETSCH: local phase counts
+# partition-local degrees among active vertices; aggregation sums the
+# partials (each edge lives in exactly one partition, so the sum is exact).
+# ---------------------------------------------------------------------------
+
+class KCoreResult(NamedTuple):
+    in_core: jax.Array      # [V] bool — member of the k-core
+    supersteps: jax.Array
+
+
+@partial(jax.jit, static_argnames=("k_core", "max_supersteps"))
+def etsch_kcore(part: Partitioning, k_core: int,
+                max_supersteps: int = 512) -> KCoreResult:
+    v_n = part.n_vertices
+    rows = jnp.arange(part.k)[:, None]
+    active0 = (jnp.zeros((v_n,), jnp.bool_)
+               .at[part.src.reshape(-1)].max(part.mask.reshape(-1))
+               .at[part.dst.reshape(-1)].max(part.mask.reshape(-1)))
+
+    def superstep(carry):
+        active, steps, _ = carry
+        live = part.mask & active[part.src] & active[part.dst]   # [K, E]
+        partial_deg = jnp.zeros((part.k, v_n), jnp.int32)
+        partial_deg = partial_deg.at[rows, part.src].add(live.astype(jnp.int32))
+        partial_deg = partial_deg.at[rows, part.dst].add(live.astype(jnp.int32))
+        deg = jnp.sum(partial_deg, axis=0)                       # aggregation
+        new_active = active & (deg >= k_core)
+        return new_active, steps + 1, jnp.any(new_active != active)
+
+    def cond(carry):
+        return carry[2] & (carry[1] < max_supersteps)
+
+    active, steps, _ = jax.lax.while_loop(
+        cond, superstep, (active0, jnp.int32(0), jnp.bool_(True)))
+    return KCoreResult(active, steps)
+
+
+@partial(jax.jit, static_argnames=("k_core",))
+def reference_kcore(g: Graph, k_core: int) -> jax.Array:
+    active0 = (g.degrees() > 0)
+
+    def body(carry):
+        active, _ = carry
+        live = g.edge_mask & active[g.src] & active[g.dst]
+        deg = (jnp.zeros(g.n_vertices, jnp.int32)
+               .at[g.src].add(live.astype(jnp.int32))
+               .at[g.dst].add(live.astype(jnp.int32)))
+        new = active & (deg >= k_core)
+        return new, jnp.any(new != active)
+
+    active, _ = jax.lax.while_loop(lambda c: c[1], body,
+                                   (active0, jnp.bool_(True)))
+    return active

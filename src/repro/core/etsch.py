@@ -1,0 +1,200 @@
+"""ETSCH — the paper's edge-partition graph-processing framework (§III).
+
+Computation model (Fig. 2):
+
+  1. *init*        — per-vertex state initialised on each induced subgraph,
+  2. *local phase* — each partition independently runs a sequential algorithm
+                     on its subgraph to a local fixed point,
+  3. *aggregation* — replicated (frontier) vertex states are reconciled with
+                     a commutative/associative reducer and copied back.
+
+Steps 2–3 repeat ("supersteps") until a global fixed point. The number of
+supersteps is the paper's *rounds* metric; the fraction saved vs a
+vertex-centric (Pregel-style, one-hop-per-round) execution is its *gain*.
+
+Hardware adaptation: the paper's local phase uses Dijkstra/heaps; on TPU we
+run masked relaxation sweeps (same fixed point, data-parallel — DESIGN.md §3).
+State is held as a dense [K, V] matrix (partition-local vertex copies);
+non-member entries hold the reducer's identity, so aggregation is a plain
+axis-0 reduce followed by a masked broadcast back to members.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .graph import Graph
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Partitioning:
+    """An edge partitioning compiled into static per-partition arrays."""
+
+    k: int                  # static
+    n_vertices: int         # static
+    e_max: int              # static: padded per-partition edge capacity
+    src: jax.Array          # [K, E_max] int32 (padding: 0, masked)
+    dst: jax.Array          # [K, E_max] int32
+    mask: jax.Array         # [K, E_max] bool
+    member: jax.Array       # [K, V] bool — v ∈ V_i
+    frontier: jax.Array     # [K, V] bool — v ∈ F_i (member of ≥ 2 partitions)
+
+    def tree_flatten(self):
+        return ((self.src, self.dst, self.mask, self.member, self.frontier),
+                (self.k, self.n_vertices, self.e_max))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], aux[1], aux[2], *children)
+
+    @property
+    def sizes(self) -> jax.Array:
+        return jnp.sum(self.mask.astype(jnp.int32), axis=1)
+
+
+def compile_partitioning(g: Graph, owner, k: int,
+                         e_max: int | None = None) -> Partitioning:
+    """Host-side: bucket edges by owner into padded [K, E_max] arrays."""
+    owner = np.asarray(owner)
+    u = np.asarray(g.src)
+    v = np.asarray(g.dst)
+    emask = np.asarray(g.edge_mask)
+    u, v, owner = u[emask], v[emask], owner[emask]
+    assert owner.min() >= 0 and owner.max() < k, "owner must be a valid partitioning"
+
+    counts = np.bincount(owner, minlength=k)
+    if e_max is None:
+        e_max = max(int(counts.max()), 1)
+        e_max = -(-e_max // 128) * 128  # lane-align
+    ps = np.zeros((k, e_max), np.int32)
+    pd = np.zeros((k, e_max), np.int32)
+    pm = np.zeros((k, e_max), bool)
+    order = np.argsort(owner, kind="stable")
+    so, su_, sv_ = owner[order], u[order], v[order]
+    group_start = np.searchsorted(so, np.arange(k))
+    pos = np.arange(len(so)) - group_start[so]
+    ps[so, pos] = su_
+    pd[so, pos] = sv_
+    pm[so, pos] = True
+
+    member = np.zeros((k, g.n_vertices), bool)
+    rows = np.repeat(np.arange(k)[:, None], e_max, 1)
+    member[rows[pm], ps[pm]] = True
+    member[rows[pm], pd[pm]] = True
+    replicas = member.sum(0)
+    frontier = member & (replicas[None, :] >= 2)
+
+    return Partitioning(k, g.n_vertices, e_max,
+                        jnp.asarray(ps), jnp.asarray(pd), jnp.asarray(pm),
+                        jnp.asarray(member), jnp.asarray(frontier))
+
+
+# ---------------------------------------------------------------------------
+# Generic superstep engine
+# ---------------------------------------------------------------------------
+
+class Problem(NamedTuple):
+    """An ETSCH problem: init / local one-sweep relaxation / aggregation.
+
+    ``local_sweep(p, state) -> state`` performs ONE edge-relaxation sweep of
+    the partition-local sequential algorithm; the engine iterates it to the
+    local fixed point (that iteration is *free* in the paper's cost model —
+    it happens inside a worker between synchronisations).
+
+    ``reduce`` must be commutative/associative with identity ``identity``.
+    ``mode`` = "replica"  → replicas hold copies of one logical value; the
+                            aggregate replaces every replica (min/max style).
+             = "partial"  → replicas hold *partial* values that must be
+                            summed across partitions (PageRank style).
+    """
+    init: Callable          # (part, **kw) -> [K, V] state
+    local_sweep: Callable   # (part, [K, V]) -> [K, V]
+    reduce: Callable        # ([K, V]) -> [V]
+    identity: float
+    mode: str = "replica"
+
+
+class EtschResult(NamedTuple):
+    state: jax.Array        # [V] final aggregated vertex state
+    supersteps: jax.Array   # scalar int32 — the paper's "rounds"
+    local_iters: jax.Array  # scalar int32 — total local sweeps executed
+
+
+def _local_fixed_point(part: Partitioning, prob: Problem, state, max_iters: int):
+    """Iterate local sweeps until no partition changes (bounded)."""
+
+    def cond(c):
+        st, it, changed = c
+        return changed & (it < max_iters)
+
+    def body(c):
+        st, it, _ = c
+        new = prob.local_sweep(part, st)
+        changed = jnp.any(new != st)
+        return new, it + 1, changed
+
+    st, iters, _ = jax.lax.while_loop(cond, body, (state, jnp.int32(0), jnp.bool_(True)))
+    return st, iters
+
+
+@partial(jax.jit, static_argnames=("prob", "max_supersteps", "max_local_iters"))
+def run_etsch(part: Partitioning, prob: Problem,
+              max_supersteps: int = 512, max_local_iters: int = 100_000,
+              **init_kw) -> EtschResult:
+    state0 = prob.init(part, **init_kw)
+
+    def agg(st):
+        red = prob.reduce(st)                                    # [V]
+        if prob.mode == "partial":
+            return red
+        return red  # replica mode: same reduce; broadcast handled below
+
+    def superstep(carry):
+        st, steps, litot, _ = carry
+        st1, li = _local_fixed_point(part, prob, st, max_local_iters)
+        red = agg(st1)                                           # [V]
+        st2 = jnp.where(part.member, red[None, :], prob.identity)
+        changed = jnp.any(st2 != st)
+        return st2, steps + 1, litot + li, changed
+
+    def cond(carry):
+        _, steps, _, changed = carry
+        return changed & (steps < max_supersteps)
+
+    st, steps, litot, _ = jax.lax.while_loop(
+        cond, superstep, (state0, jnp.int32(0), jnp.int32(0), jnp.bool_(True)))
+    return EtschResult(prob.reduce(st), steps, litot)
+
+
+# ---------------------------------------------------------------------------
+# Relaxation helpers shared by the concrete problems (algorithms.py)
+# ---------------------------------------------------------------------------
+
+def min_relax_sweep(part: Partitioning, state: jax.Array,
+                    edge_cost: float = 1.0) -> jax.Array:
+    """One min-plus sweep over every partition's edges simultaneously.
+
+    state [K, V]; for every partition-k edge (u,v):
+        state[k, v] <- min(state[k, v], state[k, u] + cost)   (both directions)
+    Flattened into a single scatter-min on [K*V].
+    """
+    k, v_n = state.shape
+    flat = state.reshape(-1)
+    base = (jnp.arange(k, dtype=jnp.int32) * v_n)[:, None]       # [K, 1]
+    iu = (base + part.src).reshape(-1)                           # [K*E] flat idx
+    iv = (base + part.dst).reshape(-1)
+    su = state[jnp.arange(k)[:, None], part.src]                 # [K, E]
+    sv = state[jnp.arange(k)[:, None], part.dst]
+    big = jnp.float32(jnp.inf)
+    cu = jnp.where(part.mask, su + edge_cost, big).reshape(-1)
+    cv = jnp.where(part.mask, sv + edge_cost, big).reshape(-1)
+    flat = flat.at[iv].min(cu)   # u -> v
+    flat = flat.at[iu].min(cv)   # v -> u
+    return flat.reshape(k, v_n)

@@ -1,0 +1,286 @@
+"""Static-shape undirected graph container + synthetic generators.
+
+The paper evaluates on SNAP graphs (Table II/III). This container keeps the
+graph in flat, fixed-shape arrays so every DFEP/ETSCH step is jittable:
+
+  * ``src``/``dst``  — one row per *undirected* edge (padded slots hold 0/0
+    and are masked out by ``edge_mask``),
+  * degrees / CSR derived lazily where needed.
+
+Generators are host-side (numpy) and deterministic given a seed; parameters
+for each paper dataset profile live in ``DATASETS`` (no network access in the
+container, so we synthesise graphs matching the published |V|, |E|, diameter
+class and clustering-coefficient class — see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected graph, one row per undirected edge, padded to a static size."""
+
+    n_vertices: int          # static
+    n_edges: int             # static: number of REAL edges (<= padded size)
+    src: jax.Array           # [E_pad] int32
+    dst: jax.Array           # [E_pad] int32
+    edge_mask: jax.Array     # [E_pad] bool — True for real edges
+
+    # -- pytree plumbing (n_vertices / n_edges are static aux data) --------
+    def tree_flatten(self):
+        return (self.src, self.dst, self.edge_mask), (self.n_vertices, self.n_edges)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        src, dst, edge_mask = children
+        return cls(aux[0], aux[1], src, dst, edge_mask)
+
+    # -- convenience --------------------------------------------------------
+    @property
+    def e_pad(self) -> int:
+        return int(self.src.shape[0])
+
+    def degrees(self) -> jax.Array:
+        """Vertex degrees, [V] int32 (each undirected edge counts once per side)."""
+        m = self.edge_mask.astype(jnp.int32)
+        d = jnp.zeros(self.n_vertices, jnp.int32)
+        d = d.at[self.src].add(m)
+        d = d.at[self.dst].add(m)
+        return d
+
+    def as_numpy(self) -> tuple[np.ndarray, np.ndarray]:
+        m = np.asarray(self.edge_mask)
+        return np.asarray(self.src)[m], np.asarray(self.dst)[m]
+
+
+def from_edge_array(n_vertices: int, edges: np.ndarray, pad_to: int | None = None) -> Graph:
+    """Build a Graph from an [E, 2] int array of undirected edges.
+
+    Dedupes (u,v)/(v,u), drops self loops, pads to ``pad_to`` (default: next
+    multiple of 128 — TPU-lane friendly).
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    u = np.minimum(edges[:, 0], edges[:, 1])
+    v = np.maximum(edges[:, 0], edges[:, 1])
+    keep = u != v
+    u, v = u[keep], v[keep]
+    uniq = np.unique(u * n_vertices + v)
+    u, v = (uniq // n_vertices).astype(np.int32), (uniq % n_vertices).astype(np.int32)
+    e = len(u)
+    if pad_to is None:
+        pad_to = max(128, -(-e // 128) * 128)
+    assert pad_to >= e, (pad_to, e)
+    pu = np.zeros(pad_to, np.int32)
+    pv = np.zeros(pad_to, np.int32)
+    pm = np.zeros(pad_to, bool)
+    pu[:e], pv[:e], pm[:e] = u, v, True
+    return Graph(int(n_vertices), int(e),
+                 jnp.asarray(pu), jnp.asarray(pv), jnp.asarray(pm))
+
+
+# ---------------------------------------------------------------------------
+# Generators (host-side numpy; deterministic by seed)
+# ---------------------------------------------------------------------------
+
+def barabasi_albert(n: int, m: int, seed: int = 0) -> Graph:
+    """Preferential-attachment graph: small diameter, power-law degrees.
+
+    Matches the ASTROPH / EMAIL-ENRON / DBLP dataset class of the paper.
+    """
+    rng = np.random.default_rng(seed)
+    targets = list(range(m))
+    repeated: list[int] = []
+    edges = []
+    for v in range(m, n):
+        for t in targets:
+            edges.append((v, t))
+        repeated.extend(targets)
+        repeated.extend([v] * m)
+        # sample next targets from the degree-weighted multiset
+        idx = rng.integers(0, len(repeated), size=3 * m)
+        cand = {repeated[i] for i in idx}
+        targets = list(cand)[:m]
+        while len(targets) < m:
+            t = int(rng.integers(0, v + 1))
+            if t not in targets:
+                targets.append(t)
+    return from_edge_array(n, np.array(edges))
+
+
+def watts_strogatz(n: int, k: int, beta: float, seed: int = 0) -> Graph:
+    """Ring lattice with rewiring: high clustering coefficient (WORDNET class)."""
+    rng = np.random.default_rng(seed)
+    u = np.repeat(np.arange(n), k // 2)
+    off = np.tile(np.arange(1, k // 2 + 1), n)
+    v = (u + off) % n
+    rewire = rng.random(len(u)) < beta
+    v = np.where(rewire, rng.integers(0, n, size=len(u)), v)
+    return from_edge_array(n, np.stack([u, v], 1))
+
+
+def road_network(rows: int, cols: int, extra_frac: float = 0.25, seed: int = 0) -> Graph:
+    """USROADS class: near-tree planar grid — huge diameter, degree ≈ 2.6.
+
+    Random spanning tree of the rows×cols grid + ``extra_frac·V`` extra grid
+    edges. Diameter is O(rows+cols) like a road network.
+    """
+    rng = np.random.default_rng(seed)
+    n = rows * cols
+
+    def vid(r, c):
+        return r * cols + c
+
+    # all grid edges
+    es = []
+    for r in range(rows):
+        for c in range(cols):
+            if c + 1 < cols:
+                es.append((vid(r, c), vid(r, c + 1)))
+            if r + 1 < rows:
+                es.append((vid(r, c), vid(r + 1, c)))
+    es = np.array(es)
+    perm = rng.permutation(len(es))
+    es = es[perm]
+    # Kruskal spanning tree (union-find)
+    parent = np.arange(n)
+
+    def find(x):
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:
+            parent[x], x = root, parent[x]
+        return root
+
+    tree, extra = [], []
+    for a, b in es:
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[ra] = rb
+            tree.append((a, b))
+        else:
+            extra.append((a, b))
+    n_extra = int(extra_frac * n)
+    keep = extra[:n_extra]
+    return from_edge_array(n, np.array(tree + keep))
+
+
+def erdos_renyi(n: int, e: int, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, size=int(e * 1.3))
+    v = rng.integers(0, n, size=int(e * 1.3))
+    g = from_edge_array(n, np.stack([u, v], 1))
+    if g.n_edges > e:  # trim to target
+        su, sv = g.as_numpy()
+        return from_edge_array(n, np.stack([su[:e], sv[:e]], 1))
+    return g
+
+
+def remap_edges(g: Graph, fraction: float, seed: int = 0) -> Graph:
+    """Paper Fig-6 protocol: remap a random fraction of edges to random
+    endpoints, lowering the diameter while keeping |V|, |E| fixed."""
+    rng = np.random.default_rng(seed)
+    u, v = g.as_numpy()
+    n = g.n_vertices
+    k = int(fraction * len(u))
+    idx = rng.choice(len(u), size=k, replace=False)
+    side = rng.random(k) < 0.5
+    new_end = rng.integers(0, n, size=k)
+    u2, v2 = u.copy(), v.copy()
+    u2[idx] = np.where(side, new_end, u2[idx])
+    v2[idx] = np.where(~side, new_end, v2[idx])
+    return from_edge_array(n, np.stack([u2, v2], 1), pad_to=g.e_pad)
+
+
+def largest_component(g: Graph) -> Graph:
+    """Restrict to the largest connected component (paper cleans SNAP data
+    the same way)."""
+    u, v = g.as_numpy()
+    n = g.n_vertices
+    label = np.arange(n)
+    # label propagation until fixpoint (numpy; bounded by diameter)
+    for _ in range(n):
+        lu, lv = label[u], label[v]
+        m = np.minimum(lu, lv)
+        new = label.copy()
+        np.minimum.at(new, u, m)
+        np.minimum.at(new, v, m)
+        if np.array_equal(new, label):
+            break
+        label = new
+    roots, counts = np.unique(label, return_counts=True)
+    big = roots[np.argmax(counts)]
+    keep = (label[u] == big) & (label[v] == big)
+    u, v = u[keep], v[keep]
+    # compact vertex ids
+    verts = np.unique(np.concatenate([u, v]))
+    remap = np.full(n, -1, np.int64)
+    remap[verts] = np.arange(len(verts))
+    return from_edge_array(len(verts), np.stack([remap[u], remap[v]], 1))
+
+
+# ---------------------------------------------------------------------------
+# Paper dataset profiles (synthetic stand-ins; scale=1.0 matches published |V|)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    builder: Callable[[float, int], Graph]
+    table: str        # "II" (simulation) or "III" (EC2)
+    v_published: int
+    e_published: int
+    diameter_published: int
+
+
+def _astroph(scale: float, seed: int) -> Graph:
+    return largest_component(barabasi_albert(int(17903 * scale), 11, seed))
+
+
+def _email_enron(scale: float, seed: int) -> Graph:
+    return largest_component(barabasi_albert(int(33696 * scale), 5, seed))
+
+
+def _usroads(scale: float, seed: int) -> Graph:
+    side = int(np.sqrt(126146 * scale))
+    return largest_component(road_network(side, side, 0.28, seed))
+
+
+def _wordnet(scale: float, seed: int) -> Graph:
+    return largest_component(watts_strogatz(int(75606 * scale), 6, 0.1, seed))
+
+
+def _dblp(scale: float, seed: int) -> Graph:
+    return largest_component(barabasi_albert(int(317080 * scale), 3, seed))
+
+
+def _youtube(scale: float, seed: int) -> Graph:
+    return largest_component(barabasi_albert(int(1134890 * scale), 3, seed))
+
+
+def _amazon(scale: float, seed: int) -> Graph:
+    return largest_component(barabasi_albert(int(400727 * scale), 6, seed))
+
+
+DATASETS: dict[str, DatasetSpec] = {
+    "astroph":     DatasetSpec("astroph", _astroph, "II", 17903, 196972, 14),
+    "email-enron": DatasetSpec("email-enron", _email_enron, "II", 33696, 180811, 13),
+    "usroads":     DatasetSpec("usroads", _usroads, "II", 126146, 161950, 617),
+    "wordnet":     DatasetSpec("wordnet", _wordnet, "II", 75606, 231622, 14),
+    "dblp":        DatasetSpec("dblp", _dblp, "III", 317080, 1049866, 21),
+    "youtube":     DatasetSpec("youtube", _youtube, "III", 1134890, 2987624, 20),
+    "amazon":      DatasetSpec("amazon", _amazon, "III", 400727, 2349869, 18),
+}
+
+
+def load_dataset(name: str, scale: float = 1.0, seed: int = 0) -> Graph:
+    return DATASETS[name].builder(scale, seed)

@@ -1,0 +1,114 @@
+"""Partition-quality metrics (paper §V-A): balance/NSTDEV, communication
+cost (MESSAGES = Σ|F_i|), connectedness, and the *gain* of ETSCH SSSP vs the
+vertex-centric baseline."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .algorithms import etsch_sssp, reference_sssp
+from .etsch import Partitioning, compile_partitioning
+from .graph import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionMetrics:
+    k: int
+    sizes: np.ndarray            # [K] edges per partition
+    largest_norm: float          # max |E_i| / (|E|/K)     (paper fig 5a/7a)
+    nstdev: float                # paper's NSTDEV formula  (fig 5/6f/7)
+    messages: int                # Σ|F_i|                  (fig 5c/6c/7c)
+    frontier_total: int          # number of distinct frontier vertices
+    replication_factor: float    # Σ|V_i| / |V|
+    connected_frac: float        # fraction of partitions that are connected
+    rounds: int | None = None    # partitioner rounds (when known)
+    gain: float | None = None    # ETSCH SSSP gain       (fig 5d/6d/7d)
+
+    def row(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["sizes"] = None
+        return d
+
+
+def _sizes(owner: np.ndarray, k: int) -> np.ndarray:
+    return np.bincount(owner[owner >= 0], minlength=k)
+
+
+def nstdev(sizes: np.ndarray, n_edges: int) -> float:
+    k = len(sizes)
+    norm = sizes / (n_edges / k)
+    return float(np.sqrt(np.mean((norm - 1.0) ** 2)))
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _membership(g: Graph, owner: jax.Array, k: int):
+    member = jnp.zeros((k, g.n_vertices), jnp.bool_)
+    ow = jnp.where(g.edge_mask, owner, 0)
+    valid = g.edge_mask & (owner >= 0)
+    member = member.at[ow, g.src].max(valid)
+    member = member.at[ow, g.dst].max(valid)
+    return member
+
+
+def connected_fraction(part: Partitioning) -> float:
+    """Fraction of partitions whose induced subgraph is connected
+    (paper fig 6e plots the complement). Label-propagation per partition."""
+    k, v_n = part.k, part.n_vertices
+    # seed labels: vertex index where member else +inf; propagate min via edges
+    lab = jnp.where(part.member,
+                    jnp.arange(v_n, dtype=jnp.float32)[None, :], jnp.inf)
+    rows = jnp.arange(k)[:, None]
+
+    def body(carry):
+        l, _ = carry
+        lu = jnp.where(part.mask, l[rows, part.src], jnp.inf)
+        lv = jnp.where(part.mask, l[rows, part.dst], jnp.inf)
+        nl = l.at[rows, part.dst].min(lu).at[rows, part.src].min(lv)
+        return nl, jnp.any(nl != l)
+
+    lab, _ = jax.lax.while_loop(lambda c: c[1], body, (lab, jnp.bool_(True)))
+    # connected iff all members share one label
+    mn = jnp.min(jnp.where(part.member, lab, jnp.inf), axis=1, keepdims=True)
+    same = jnp.where(part.member, lab == mn, True)
+    conn = jnp.all(same, axis=1)
+    nonempty = jnp.any(part.member, axis=1)
+    return float(jnp.sum(conn & nonempty) / jnp.maximum(jnp.sum(nonempty), 1))
+
+
+def evaluate(g: Graph, owner, k: int, *, rounds: int | None = None,
+             compute_gain: bool = True, part: Partitioning | None = None,
+             source: int = 0) -> PartitionMetrics:
+    owner_np = np.asarray(owner)
+    emask = np.asarray(g.edge_mask)
+    sizes = _sizes(owner_np[emask], k)
+
+    member = np.asarray(_membership(g, jnp.asarray(owner), k))
+    replicas = member.sum(0)
+    frontier_per_part = (member & (replicas[None, :] >= 2)).sum(1)
+    messages = int(frontier_per_part.sum())
+
+    if part is None:
+        part = compile_partitioning(g, owner, k)
+
+    gain = None
+    if compute_gain:
+        res = etsch_sssp(part, source)
+        _, ref_rounds = reference_sssp(g, source)
+        gain = float(1.0 - int(res.supersteps) / max(int(ref_rounds), 1))
+
+    return PartitionMetrics(
+        k=k,
+        sizes=sizes,
+        largest_norm=float(sizes.max() / (g.n_edges / k)),
+        nstdev=nstdev(sizes, g.n_edges),
+        messages=messages,
+        frontier_total=int((replicas >= 2).sum()),
+        replication_factor=float(member.sum() / max(g.n_vertices, 1)),
+        connected_frac=connected_fraction(part),
+        rounds=rounds,
+        gain=gain,
+    )

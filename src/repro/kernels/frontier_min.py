@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: ETSCH frontier aggregation (masked min over replicas).
+
+Aggregation phase of the paper's framework (§III step 3): every frontier
+vertex appears in several partitions; its replicas' states are reconciled
+with a min reduce. State is [K, V] (partition-major); output [V].
+
+TPU mapping: V is blocked into lane-aligned [BLK_V] tiles; each grid step
+loads a [K, BLK_V] state tile + member-mask tile into VMEM and the VPU
+reduces over the K sublane axis. K is padded to the 8-sublane multiple.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(state_ref, member_ref, o_ref):
+    s = state_ref[...]                              # [K, BLK_V]
+    m = member_ref[...]
+    big = jnp.asarray(jnp.inf, s.dtype)
+    o_ref[...] = jnp.min(jnp.where(m, s, big), axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def frontier_min(state: jax.Array, member: jax.Array, block_v: int = 2048,
+                 interpret: bool = True) -> jax.Array:
+    """Masked min over axis 0: state [K, V] float, member [K, V] bool -> [V]."""
+    k, v = state.shape
+    k_pad = -(-k // 8) * 8
+    v_pad = -(-v // block_v) * block_v
+    sp = jnp.full((k_pad, v_pad), jnp.inf, state.dtype).at[:k, :v].set(state)
+    mp = jnp.zeros((k_pad, v_pad), jnp.bool_).at[:k, :v].set(member)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(v_pad // block_v,),
+        in_specs=[pl.BlockSpec((k_pad, block_v), lambda i: (0, i)),
+                  pl.BlockSpec((k_pad, block_v), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block_v), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, v_pad), state.dtype),
+        interpret=interpret,
+    )(sp, mp)
+    return out[0, :v]

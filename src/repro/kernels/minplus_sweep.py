@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: one min-plus relaxation sweep (ETSCH local phase).
+
+The paper's local computation runs Dijkstra with a heap; the TPU adaptation
+(DESIGN.md §3) is a data-parallel relaxation sweep with the same fixed
+point. A sweep is a scatter-min — irregular on its face, so the kernel
+re-expresses it densely, the TPU-native way:
+
+  grid = (vertex_blocks, edge_blocks); each instance loads an edge tile
+  (src, dst, mask) plus the full dist vector tile-gathered candidate
+  values, builds the [BLK_E, BLK_V] one-hot compare mask against the
+  vertex tile's iota (VPU broadcast-compare — no scatter), and min-reduces
+  over the edge axis into the output vertex tile. The edge axis is the
+  revisiting reduction dimension (init on first visit).
+
+Candidate values dist[src]+cost are gathered OUTSIDE the kernel (XLA gather
+is already optimal for this) — the kernel's job is the scatter-min, which
+is the part XLA lowers poorly on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(dst_ref, cand_ref, dist_ref, o_ref, *, block_v: int):
+    vb = pl.program_id(0)
+    eb = pl.program_id(1)
+
+    @pl.when(eb == 0)
+    def _init():
+        o_ref[...] = dist_ref[...]                  # start from current dist
+
+    dst = dst_ref[...]                              # [1, BLK_E] int32
+    cand = cand_ref[...]                            # [1, BLK_E] float
+    v0 = vb * block_v
+    iota = jax.lax.broadcasted_iota(jnp.int32, (block_v, dst.shape[1]), 0) + v0
+    hit = iota == dst                               # [BLK_V, BLK_E]
+    big = jnp.asarray(jnp.inf, cand.dtype)
+    contrib = jnp.where(hit, cand, big)             # broadcast row of cands
+    upd = jnp.min(contrib, axis=1, keepdims=True).T  # [1, BLK_V]
+    o_ref[...] = jnp.minimum(o_ref[...], upd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "block_e", "interpret"))
+def minplus_sweep(dist: jax.Array, src: jax.Array, dst: jax.Array,
+                  mask: jax.Array, cost: float = 1.0,
+                  block_v: int = 512, block_e: int = 512,
+                  interpret: bool = True) -> jax.Array:
+    """One undirected relaxation sweep. dist [V]; src/dst [E]; mask [E]."""
+    v, e = dist.shape[0], src.shape[0]
+    big = jnp.asarray(jnp.inf, dist.dtype)
+    # undirected: relax both directions -> 2E directed candidates
+    d_dst = jnp.concatenate([dst, src]).astype(jnp.int32)
+    d_cand = jnp.concatenate([
+        jnp.where(mask, dist[src] + cost, big),
+        jnp.where(mask, dist[dst] + cost, big)])
+    e2 = 2 * e
+    e_pad = -(-e2 // block_e) * block_e
+    v_pad = -(-v // block_v) * block_v
+    dstp = jnp.full((1, e_pad), jnp.int32(-1)).at[0, :e2].set(d_dst)
+    candp = jnp.full((1, e_pad), big).at[0, :e2].set(d_cand)
+    distp = jnp.full((1, v_pad), big).at[0, :v].set(dist)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_v=block_v),
+        grid=(v_pad // block_v, e_pad // block_e),
+        in_specs=[pl.BlockSpec((1, block_e), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, block_e), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, block_v), lambda i, j: (0, i))],
+        out_specs=pl.BlockSpec((1, block_v), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, v_pad), dist.dtype),
+        interpret=interpret,
+    )(dstp, candp, distp)
+    return out[0, :v]

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: Mamba-1 selective scan (inference/prefill path).
+
+The §Roofline analysis flags the SSM training/prefill cells as memory-bound:
+the XLA associative-scan materialises O(S·d_inner·N·log S) bytes of
+intermediate state in HBM. This kernel is the TPU adaptation of the CUDA
+selective-scan: the recurrent state h [B, D_blk, N] lives in a VMEM scratch
+across sequence chunks, so HBM traffic drops to the O(S·(d_inner + N))
+inputs/outputs — the ~200× reduction quoted in EXPERIMENTS.md §Perf.
+
+Grid: (d_inner blocks, sequence chunks) — the chunk axis iterates
+sequentially (last grid dim), carrying h in scratch; each chunk is processed
+with an in-VMEM fori_loop over its timesteps (elementwise VPU work on
+[B, D_blk, N] tiles).
+
+Forward-only (used for prefill/serving; training keeps the differentiable
+associative-scan path — see ssm.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, o_ref, h_ref,
+            *, chunk: int):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...]          # [B, chunk, D_blk]
+    dt = dt_ref[...]        # [B, chunk, D_blk]
+    bc = b_ref[...]         # [B, chunk, N]
+    cc = c_ref[...]         # [B, chunk, N]
+    a = a_ref[...]          # [D_blk, N]
+    d_skip = d_ref[...]     # [1, D_blk]
+
+    def step(t, carry):
+        h, y = carry
+        dt_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, 1)[:, 0]   # [B, D_blk]
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, 1)[:, 0]
+        b_t = jax.lax.dynamic_slice_in_dim(bc, t, 1, 1)[:, 0]    # [B, N]
+        c_t = jax.lax.dynamic_slice_in_dim(cc, t, 1, 1)[:, 0]
+        decay = jnp.exp(-dt_t[:, :, None] * a[None])             # [B,D,N]
+        inject = (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        h = decay * h + inject
+        y_t = jnp.sum(h * c_t[:, None, :], axis=-1)              # [B, D_blk]
+        y_t = y_t + x_t * d_skip
+        y = jax.lax.dynamic_update_slice_in_dim(y, y_t[:, None], t, 1)
+        return h, y
+
+    h0 = h_ref[...]
+    y0 = jnp.zeros_like(x)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_ref[...] = h
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_d", "chunk", "interpret"))
+def selective_scan(x: jax.Array, dt: jax.Array, b: jax.Array, c: jax.Array,
+                   a: jax.Array, d_skip: jax.Array, *,
+                   block_d: int = 128, chunk: int = 128,
+                   interpret: bool = True) -> jax.Array:
+    """h_t = exp(-dt_t ⊙ A) h_{t-1} + dt_t ⊙ (B_t ⊗ x_t);  y_t = C_t·h_t + D x_t.
+
+    x/dt [B,S,Di] f32; b/c [B,S,N] f32; a [Di,N] (positive); d_skip [Di].
+    Returns y [B,S,Di].
+    """
+    bsz, s, d_in = x.shape
+    n = a.shape[1]
+    d_pad = -(-d_in // block_d) * block_d
+    s_pad = -(-s // chunk) * chunk
+
+    def padx(t, dval=0.0):
+        out = jnp.full((bsz, s_pad, d_pad), dval, t.dtype)
+        return out.at[:, :s, :d_in].set(t)
+
+    xp, dtp = padx(x), padx(dt)
+    bp = jnp.zeros((bsz, s_pad, n), b.dtype).at[:, :s].set(b)
+    cp = jnp.zeros((bsz, s_pad, n), c.dtype).at[:, :s].set(c)
+    ap = jnp.zeros((d_pad, n), a.dtype).at[:d_in].set(a)
+    dp = jnp.zeros((1, d_pad), d_skip.dtype).at[0, :d_in].set(d_skip)
+
+    grid = (d_pad // block_d, s_pad // chunk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bsz, chunk, block_d), lambda i, j: (0, j, i)),
+            pl.BlockSpec((bsz, chunk, block_d), lambda i, j: (0, j, i)),
+            pl.BlockSpec((bsz, chunk, n), lambda i, j: (0, j, 0)),
+            pl.BlockSpec((bsz, chunk, n), lambda i, j: (0, j, 0)),
+            pl.BlockSpec((block_d, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_d), lambda i, j: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bsz, chunk, block_d), lambda i, j: (0, j, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s_pad, d_pad), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bsz, block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(xp, dtp, bp, cp, ap, dp)
+    return out[:, :s, :d_in]

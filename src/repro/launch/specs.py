@@ -1,0 +1,133 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + logical shardings for every
+(arch × shape) cell — weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..configs.base import SHAPES, ModelConfig, ShapeConfig
+from ..models import lm
+from ..sharding.env import get_env, logical_spec
+from ..train.optimizer import OptState
+
+SD = jax.ShapeDtypeStruct
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: 524k-token decode requires "
+                "sub-quadratic attention (DESIGN.md §5)")
+    return None
+
+
+def param_structs(cfg: ModelConfig):
+    """(ShapeDtypeStruct tree, logical spec tree) without allocating: trace
+    init_params abstractly, capturing the (static) spec tree on the side."""
+    captured: dict[str, Any] = {}
+
+    def f(k):
+        p, s = lm.init_params(cfg, k)
+        captured["s"] = s
+        return p
+
+    structs = jax.eval_shape(f, jax.random.key(0))
+    return structs, captured["s"]
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeConfig):
+    """Training/prefill batch stand-ins."""
+    b = shape.global_batch
+    s = shape.seq_len
+    s_text = s - (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    structs: dict[str, Any] = {
+        "tokens": SD((b, s_text), jnp.int32),
+        "labels": SD((b, s_text), jnp.int32),
+    }
+    specs: dict[str, Any] = {
+        "tokens": ("dp", None),
+        "labels": ("dp", None),
+    }
+    if cfg.family == "vlm":
+        structs["img_embeds"] = SD((b, cfg.n_img_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+        specs["img_embeds"] = ("dp", None, None)
+    if cfg.family == "encdec":
+        structs["enc_frames"] = SD((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        specs["enc_frames"] = ("dp", None, None)
+    return structs, specs
+
+
+def input_specs(arch: str, shape_name: str):
+    """Everything dryrun needs for one cell: callable + arg structs/specs.
+
+    Returns dict(fn_kind, cfg, structs (tuple), logical spec trees).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"skip": reason, "cfg": cfg, "shape": shape}
+
+    p_structs, p_specs = param_structs(cfg)
+
+    if shape.kind != "train":
+        from ..models.perf import get_perf
+        perf = get_perf()
+        if perf.serve_bf16:   # §Perf: serve in bf16 (halves weight traffic)
+            p_structs = jax.tree.map(
+                lambda s: SD(s.shape, jnp.bfloat16)
+                if jnp.issubdtype(s.dtype, jnp.floating) else s, p_structs)
+        if perf.serve_replicate_dp_below_gb > 0:
+            # §Perf: replicate weights across dp when the tp-sharded copy
+            # fits — removes per-layer FSDP all-gathers from the decode path.
+            # Only pays when the batch cannot shard over dp (B < dp) and the
+            # arch is attention-bearing (weight gathers dwarf cache reads);
+            # measured regressions otherwise (EXPERIMENTS.md §Perf iter. 9).
+            total = sum(s.size * s.dtype.itemsize
+                        for s in jax.tree.leaves(p_structs))
+            per_dev_gb = total / max(get_env().tp_size(), 1) / 2**30
+            has_attn = ("attn" in cfg.layer_pattern) or cfg.mla is not None
+            small_batch = shape.global_batch < max(get_env().dp_size(), 1)
+            if (per_dev_gb <= perf.serve_replicate_dp_below_gb
+                    and has_attn and small_batch):
+                def drop_fsdp(spec):
+                    return tuple(None if part == "fsdp" else part
+                                 for part in spec)
+                p_specs = jax.tree.map(
+                    drop_fsdp, p_specs,
+                    is_leaf=lambda x: isinstance(x, tuple)
+                    and all(e is None or isinstance(e, (str, tuple))
+                            for e in x))
+
+    out = {"cfg": cfg, "shape": shape, "skip": None,
+           "params": (p_structs, p_specs)}
+
+    if shape.kind == "train":
+        b_structs, b_specs = batch_structs(cfg, shape)
+        opt_structs = OptState(
+            SD((), jnp.int32),
+            jax.tree.map(lambda x: SD(x.shape, x.dtype), p_structs),
+            jax.tree.map(lambda x: SD(x.shape, x.dtype), p_structs))
+        opt_specs = OptState((), p_specs, p_specs)
+        out["batch"] = (b_structs, b_specs)
+        out["opt"] = (opt_structs, opt_specs)
+    elif shape.kind == "prefill":
+        b_structs, b_specs = batch_structs(cfg, shape)
+        del b_structs["labels"], b_specs["labels"]
+        out["batch"] = (b_structs, b_specs)
+    else:  # decode
+        b = shape.global_batch
+        cache_structs, cache_specs = lm.cache_struct(cfg, b, shape.seq_len)
+        out["token"] = (SD((b, 1), jnp.int32),
+                        ("dp" if b >= get_env().dp_size() and
+                         b % max(get_env().dp_size(), 1) == 0 and
+                         get_env().dp_size() > 1 else None, None))
+        out["caches"] = (cache_structs, cache_specs)
+        if cfg.family == "encdec":
+            x_structs, x_specs = lm.cross_kv_struct(cfg, b)
+            out["cross"] = (x_structs, x_specs)
+    return out

@@ -1,0 +1,116 @@
+"""Flash attention with a FlashAttention-2-style custom VJP.
+
+JAX's reverse-through-scan of the online-softmax forward stores per-block
+residuals (the [B,H,Sq,blk] probability tiles) on the linearization tape —
+measured at ~40% of deepseek-v2 train HBM traffic. The FA-2 backward
+instead saves only (out, logsumexp) per query and *recomputes* each block's
+probabilities from q,k on the fly: traffic ≈ 2× forward instead of ~4×.
+
+Layout matches ``layers.flash_attention``: q [B,H,Sq,dh], k/v [B,KV,Sk,dh*].
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _blocks(x, n_blk, block):
+    b, kvh, sk, d = x.shape
+    return jnp.moveaxis(x.reshape(b, kvh, n_blk, block, d), 2, 0)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_fa2(q, k, v, causal: bool, block: int):
+    out, _ = _fwd_core(q, k, v, causal, block)
+    return out
+
+
+def _fwd_core(q, k, v, causal: bool, block: int):
+    b, hq, sq, dh = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // kvh
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.astype(jnp.float32).reshape(b, kvh, g, sq, dh)
+    n_blk = max(sk // block, 1)
+    block = sk // n_blk
+    kb = _blocks(k.astype(jnp.float32), n_blk, block)
+    vb = _blocks(v.astype(jnp.float32), n_blk, block)
+    q_pos = jnp.arange(sq)
+
+    def step(carry, xs):
+        m, l, acc, i = carry
+        kblk, vblk = xs
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qf, kblk) * scale
+        if causal:
+            k_pos = i * block + jnp.arange(block)
+            bias = jnp.where(q_pos[:, None] >= k_pos[None, :], 0.0,
+                             -jnp.inf).astype(s.dtype)
+            s = s + bias[None, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgqc,bkcd->bkgqd", p, vblk)
+        return (m_new, l, acc, i + 1), None
+
+    m0 = jnp.full((b, kvh, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)), (kb, vb))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))                # [B,KV,G,Sq]
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).reshape(b, hq, sq, dv)
+    return out.astype(q.dtype), lse
+
+
+def _fwd(q, k, v, causal, block):
+    out, lse = _fwd_core(q, k, v, causal, block)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, block, res, dout):
+    q, k, v, out, lse = res
+    b, hq, sq, dh = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // kvh
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.astype(jnp.float32).reshape(b, kvh, g, sq, dh)
+    do = dout.astype(jnp.float32).reshape(b, kvh, g, sq, dv)
+    of = out.astype(jnp.float32).reshape(b, kvh, g, sq, dv)
+    delta = jnp.sum(do * of, axis=-1)                       # [B,KV,G,Sq]
+    n_blk = max(sk // block, 1)
+    block = sk // n_blk
+    kb = _blocks(k.astype(jnp.float32), n_blk, block)
+    vb = _blocks(v.astype(jnp.float32), n_blk, block)
+    q_pos = jnp.arange(sq)
+
+    def step(dq, xs):
+        kblk, vblk, i = xs
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qf, kblk) * scale
+        if causal:
+            k_pos = i * block + jnp.arange(block)
+            bias = jnp.where(q_pos[:, None] >= k_pos[None, :], 0.0,
+                             -jnp.inf).astype(s.dtype)
+            s = s + bias[None, None, None]
+        p = jnp.exp(s - lse[..., None])                     # recomputed probs
+        dv_blk = jnp.einsum("bkgqc,bkgqd->bkcd", p, do)
+        dp = jnp.einsum("bkgqd,bkcd->bkgqc", do, vblk)
+        ds = p * (dp - delta[..., None])
+        dq = dq + jnp.einsum("bkgqc,bkcd->bkgqd", ds, kblk) * scale
+        dk_blk = jnp.einsum("bkgqc,bkgqd->bkcd", ds, qf) * scale
+        return dq, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros_like(qf)
+    dq, (dk_b, dv_b) = jax.lax.scan(
+        step, dq0, (kb, vb, jnp.arange(n_blk, dtype=jnp.int32)))
+    dk = jnp.moveaxis(dk_b, 0, 2).reshape(b, kvh, sk, dh)
+    dv_ = jnp.moveaxis(dv_b, 0, 2).reshape(b, kvh, sk, dv)
+    return (dq.reshape(b, hq, sq, dh).astype(q.dtype),
+            dk.astype(k.dtype), dv_.astype(v.dtype))
+
+
+flash_fa2.defvjp(_fwd, _bwd)

@@ -1,0 +1,335 @@
+"""Model assembly: decoder-only LM (dense/MoE/MLA/SSM/hybrid), enc-dec
+(whisper), and VLM-stub (llava) — all built from one layer vocabulary and
+executed as ``lax.scan`` over repeated blocks (keeps lowered HLO size
+independent of depth; DESIGN.md §6).
+
+Layout of ``params``:
+  embed      [V_pad, D]
+  blocks     {"l0": ..., "l{P-1}": ...}  — each leaf stacked [R, ...]
+  enc_blocks (encdec only) — same scheme, pattern ("attn",)
+  final_norm [D];  lm_head [V_pad, D] (absent if tied)
+
+Caches (decode): per pattern position, stacked [R, ...]:
+  attn  -> {"k": [R,B,S,KV,dh], "v": ...}
+  ssm   -> {"conv": [R,B,K-1,Di], "h": [R,B,Di,N]}
+  cross (whisper) -> precomputed {"k": [R,B,S_enc,KV,dh], "v": ...}
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.env import get_env, shard
+from . import layers as L
+from . import ssm as S
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def vocab_pad(cfg: ModelConfig) -> int:
+    return L.pad_to(cfg.vocab, 128)
+
+
+def _init_layer(cfg: ModelConfig, kind: str, pos: int, key: jax.Array,
+                cross: bool = False, encoder: bool = False):
+    """One layer's params/specs: mixer + optional FFN (+ cross-attn)."""
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), L.PARAM_DTYPE)}
+    s: dict[str, Any] = {"norm1": (None,)}
+    if kind == "ssm":
+        p["mixer"], s["mixer"] = S.init_ssm(cfg, ks[0])
+    elif cfg.mla is not None:
+        p["mixer"], s["mixer"] = L.init_mla(cfg, ks[0])
+    else:
+        p["mixer"], s["mixer"] = L.init_attention(cfg, ks[0])
+    if cross:
+        p["norm_x"] = jnp.ones((cfg.d_model,), L.PARAM_DTYPE)
+        s["norm_x"] = (None,)
+        p["cross"], s["cross"] = L.init_attention(cfg, ks[1])
+    fk = "dense" if encoder else cfg.ffn_kind(pos)
+    if fk == "moe":
+        p["norm2"] = jnp.ones((cfg.d_model,), L.PARAM_DTYPE)
+        s["norm2"] = (None,)
+        p["ffn"], s["ffn"] = L.init_moe(cfg, ks[2])
+    elif fk == "dense":
+        p["norm2"] = jnp.ones((cfg.d_model,), L.PARAM_DTYPE)
+        s["norm2"] = (None,)
+        p["ffn"], s["ffn"] = L.init_mlp(cfg, ks[2])
+    return p, s
+
+
+def _stack_init(fn, repeats: int, key: jax.Array):
+    """vmap an init over R block repeats -> leaves [R, ...]; specs get a
+    leading None (the scan axis is never sharded)."""
+    keys = jax.random.split(key, repeats)
+    p0, s0 = fn(keys[0])
+    p = jax.vmap(lambda k: fn(k)[0])(keys)
+    s = jax.tree.map(lambda spec: (None,) + tuple(spec), s0,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    return p, s
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    ks = jax.random.split(key, 8)
+    vp = vocab_pad(cfg)
+    pattern = cfg.layer_pattern
+    repeats = cfg.block_repeats
+    cross = cfg.family == "encdec"
+
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    params["embed"] = L._init(ks[0], (vp, cfg.d_model))
+    specs["embed"] = ("tp", "fsdp")
+
+    blocks_p, blocks_s = {}, {}
+    for i, kind in enumerate(pattern):
+        fn = partial(_init_layer, cfg, kind, i, cross=cross)
+        blocks_p[f"l{i}"], blocks_s[f"l{i}"] = _stack_init(
+            fn, repeats, jax.random.fold_in(ks[1], i))
+    params["blocks"], specs["blocks"] = blocks_p, blocks_s
+
+    if cfg.family == "encdec":
+        fn = partial(_init_layer, cfg, "attn", 0, encoder=True)
+        params["enc_blocks"], specs["enc_blocks"] = {}, {}
+        ep, es = _stack_init(fn, cfg.n_enc_layers, ks[2])
+        params["enc_blocks"]["l0"], specs["enc_blocks"]["l0"] = ep, es
+        params["enc_final_norm"] = jnp.ones((cfg.d_model,), L.PARAM_DTYPE)
+        specs["enc_final_norm"] = (None,)
+
+    params["final_norm"] = jnp.ones((cfg.d_model,), L.PARAM_DTYPE)
+    specs["final_norm"] = (None,)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._init(ks[3], (vp, cfg.d_model))
+        specs["lm_head"] = ("tp", "fsdp")
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg: ModelConfig, kind: str, pos: int, p: dict,
+                 x: jax.Array, *, positions, cache=None, cache_len=None,
+                 memory: jax.Array | None = None,
+                 cross_kv: tuple | None = None, causal: bool = True,
+                 encoder: bool = False):
+    """Pre-norm residual layer. Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["norm1"], cfg.rms_eps)
+    if kind == "ssm":
+        y, new_cache = S.ssm_block(cfg, p["mixer"], h, state=cache)
+    elif cfg.mla is not None:
+        y, new_cache = L.mla_attention(cfg, p["mixer"], h, positions=positions,
+                                       cache=cache, cache_len=cache_len)
+    else:
+        y, new_cache = L.attention(cfg, p["mixer"], h, positions=positions,
+                                   causal=causal, cache=cache,
+                                   cache_len=cache_len)
+    x = x + y
+    if "cross" in p:
+        hx = L.rms_norm(x, p["norm_x"], cfg.rms_eps)
+        if memory is not None:         # train/prefill: attend to encoder output
+            y, _ = L.attention(cfg, p["cross"], hx, positions=positions,
+                               causal=False, kv_input=memory, use_rope=False)
+        else:                          # decode: precomputed cross K/V
+            y = L.attention_fixed_kv(cfg, p["cross"], hx, *cross_kv)
+        x = x + y
+    if "ffn" in p:
+        h2 = L.rms_norm(x, p["norm2"], cfg.rms_eps)
+        if cfg.moe is not None and (not encoder) and cfg.moe_at(pos):
+            y2, aux = L.moe(cfg, p["ffn"], h2)
+        else:
+            y2 = L.mlp(p["ffn"], h2)
+        x = x + y2
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Block scan
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(cfg: ModelConfig, blocks: dict, x: jax.Array, *,
+                 positions, caches=None, cache_len=None, memory=None,
+                 cross_kvs=None, causal=True, encoder=False, remat=False,
+                 pattern=None, collect_cache=False):
+    """Scan over R repeated blocks. Returns (x, new_caches | None, aux)."""
+    pattern = pattern or (("attn",) if encoder else cfg.layer_pattern)
+    has_cache = caches is not None
+    has_cross = cross_kvs is not None
+
+    def body(carry, xs):
+        x, aux = carry
+        bp = xs["p"]
+        cs = xs.get("c")
+        xkv = xs.get("x")
+        new_cs = {}
+        for i, kind in enumerate(pattern):
+            c = cs[f"l{i}"] if cs is not None else None
+            ck = xkv[f"l{i}"] if xkv is not None else None
+            x, nc, a = _apply_layer(
+                cfg, kind, i, bp[f"l{i}"], x, positions=positions,
+                cache=c, cache_len=cache_len, memory=memory,
+                cross_kv=ck, causal=causal, encoder=encoder)
+            aux = aux + a
+            if has_cache or collect_cache:
+                new_cs[f"l{i}"] = nc
+        return (x, aux), (new_cs if (has_cache or collect_cache) else 0)
+
+    if remat:
+        from .perf import get_perf
+        if get_perf().remat_policy == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            body = jax.checkpoint(body)
+
+    xs = {"p": blocks}
+    if has_cache:
+        xs["c"] = caches
+    if has_cross:
+        xs["x"] = cross_kvs
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    new_caches = ys if (has_cache or collect_cache) else None
+    return x, new_caches, aux
+
+
+def _encode(cfg: ModelConfig, params: dict, enc_frames: jax.Array):
+    """Whisper encoder over stub frame embeddings [B, S_enc, D]."""
+    x = enc_frames
+    pos = jnp.arange(x.shape[1])
+    x, _, _ = _scan_blocks(cfg, params["enc_blocks"], x, positions=pos,
+                           causal=False, encoder=True, pattern=("attn",))
+    return L.rms_norm(x, params["enc_final_norm"], cfg.rms_eps)
+
+
+def _logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(L.COMPUTE_DTYPE),
+                        head.astype(L.COMPUTE_DTYPE))
+    return shard(logits, "dp", None, "tp")
+
+
+def forward_lm(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+               img_embeds: jax.Array | None = None,
+               enc_frames: jax.Array | None = None,
+               remat: bool = True, collect_cache: bool = False):
+    """Full-sequence forward (train / prefill).
+
+    tokens [B, S_text]; vlm: img_embeds [B, N_img, D] prepended;
+    encdec: enc_frames [B, S_enc, D] through the encoder as cross memory.
+    Returns (logits [B, S, V_pad], aux, caches | None).
+    """
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+    if img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(x.dtype), x], axis=1)
+    x = shard(x, "dp", None, None)
+    memory = None
+    if enc_frames is not None:
+        memory = _encode(cfg, params, enc_frames)
+    positions = jnp.arange(x.shape[1])
+    x, caches, aux = _scan_blocks(
+        cfg, params["blocks"], x, positions=positions, memory=memory,
+        causal=True, remat=remat, collect_cache=collect_cache)
+    return _logits(cfg, params, x), aux, caches
+
+
+def cross_kvs_from_memory(cfg: ModelConfig, params: dict, memory: jax.Array):
+    """Precompute every decoder layer's cross K/V from encoder output
+    (whisper decode; [R, B, S_enc, KV, dh] each)."""
+    bp = params["blocks"]["l0"]["cross"]
+    mc = memory.astype(L.COMPUTE_DTYPE)
+    k = jnp.einsum("bsd,rdhk->rbshk", mc, bp["wk"].astype(L.COMPUTE_DTYPE))
+    v = jnp.einsum("bsd,rdhk->rbshk", mc, bp["wv"].astype(L.COMPUTE_DTYPE))
+    if cfg.qkv_bias:
+        k = k + bp["bk"].astype(L.COMPUTE_DTYPE)[:, None, None]
+        v = v + bp["bv"].astype(L.COMPUTE_DTYPE)[:, None, None]
+    return {"l0": (jnp.moveaxis(k, 2, 3) if False else k, v)}
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
+                caches, cache_len: jax.Array, cross_kvs=None):
+    """One decode step. token [B, 1] int32; cache_len: current prefix length.
+    Returns (logits [B, 1, V_pad], new_caches)."""
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[token]
+    positions = jnp.full((1,), cache_len, jnp.int32)
+    x, new_caches, _ = _scan_blocks(
+        cfg, params["blocks"], x, positions=positions, caches=caches,
+        cache_len=cache_len, cross_kvs=cross_kvs, causal=True)
+    return _logits(cfg, params, x), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (shapes + logical partition specs)
+# ---------------------------------------------------------------------------
+
+def cache_struct(cfg: ModelConfig, batch: int, s_max: int):
+    """Returns (pytree of ShapeDtypeStruct, pytree of logical specs) for the
+    decode caches. Spec policy (DESIGN.md §6): batch over dp when it shards
+    evenly, KV sequence over tp (cross-chip flash-decode); B==1 long-context
+    shards the sequence over (dp+tp)."""
+    env = get_env()
+    dp = env.dp_size()
+    r = cfg.block_repeats
+    tp = env.tp_size()
+    h, kv = L.pad_heads(cfg.n_heads, cfg.n_kv, tp)
+    dh = cfg.head_dim
+    b_shardable = batch % dp == 0 and batch >= dp and dp > 1
+    if b_shardable:
+        b_spec, s_spec = "dp", "tp"
+    elif dp > 1:
+        b_spec, s_spec = None, ("dp", "tp")
+    else:
+        b_spec, s_spec = None, "tp"
+
+    structs: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    sd = jax.ShapeDtypeStruct
+    for i, kind in enumerate(cfg.layer_pattern):
+        name = f"l{i}"
+        if kind == "ssm":
+            s_cfg, d_in, _ = S._ssm_dims(cfg)
+            structs[name] = (
+                sd((r, batch, s_cfg.d_conv - 1, d_in), jnp.bfloat16),
+                sd((r, batch, d_in, s_cfg.d_state), jnp.float32))
+            specs[name] = ((None, b_spec if b_shardable else None, None, "tp"),
+                           (None, b_spec if b_shardable else None, "tp", None))
+        elif cfg.mla is not None:
+            m = cfg.mla
+            structs[name] = (
+                sd((r, batch, s_max, m.kv_lora), jnp.bfloat16),
+                sd((r, batch, s_max, m.rope_head_dim), jnp.bfloat16))
+            specs[name] = ((None, b_spec, s_spec, None),
+                           (None, b_spec, s_spec, None))
+        else:
+            structs[name] = (
+                sd((r, batch, s_max, kv, dh), jnp.bfloat16),
+                sd((r, batch, s_max, kv, dh), jnp.bfloat16))
+            specs[name] = ((None, b_spec, s_spec, None, None),
+                           (None, b_spec, s_spec, None, None))
+    return structs, specs
+
+
+def cross_kv_struct(cfg: ModelConfig, batch: int):
+    env = get_env()
+    tp = env.tp_size()
+    h, kv = L.pad_heads(cfg.n_heads, cfg.n_kv, tp)
+    dh = cfg.head_dim
+    dp = env.dp_size()
+    b_spec = "dp" if (batch % dp == 0 and batch >= dp and dp > 1) else None
+    sd = jax.ShapeDtypeStruct
+    structs = {"l0": (sd((cfg.block_repeats, batch, cfg.enc_seq, kv, dh), jnp.bfloat16),
+                      sd((cfg.block_repeats, batch, cfg.enc_seq, kv, dh), jnp.bfloat16))}
+    specs = {"l0": ((None, b_spec, None, None, None),
+                    (None, b_spec, None, None, None))}
+    return structs, specs

@@ -1,0 +1,58 @@
+"""Performance profile — the §Perf hillclimb knobs.
+
+``BASELINE`` is the paper-faithful-substrate configuration the first
+roofline table was measured with; ``TUNED`` holds the accepted iterations.
+Each knob maps to one hypothesis→change→measure entry in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfConfig:
+    # flash attention: keep probs in bf16 for the PV matmul (f32 accum)
+    pv_bf16: bool = False
+    # flash attention: additive causal bias instead of a [B,H,Sq,blk] select
+    additive_mask: bool = False
+    # flash attention: FA2-style custom VJP (recompute probs in bwd instead
+    # of storing per-block scan residuals)
+    flash_custom_vjp: bool = False
+    # remat: "block" = full-block checkpoint; "dots" = save matmul outputs
+    remat_policy: str = "block"
+    # selective scan: intermediate dtype + chunk length
+    ssm_bf16: bool = False
+    ssm_chunk: int = 256
+    # sequence-parallel activation constraints at block boundaries (train)
+    sp_activations: bool = False
+    # serving: params in bf16, replicated over dp (sharded over tp only)
+    # when the per-device footprint fits — kills FSDP weight all-gathers
+    serve_bf16: bool = False
+    serve_replicate_dp_below_gb: float = 0.0   # 0 = off
+
+
+BASELINE = PerfConfig()
+
+# Accepted §Perf iterations (EXPERIMENTS.md logs the full
+# hypothesis→measure trail, including the refuted knobs):
+#  * flash_custom_vjp (FA2 bwd): deepseek train mem 112.9s -> 74.7s
+#  * additive_mask: -7% standalone (built into the FA2 path)
+#  * ssm_chunk 4096 (kill outer chunk loop): falcon-mamba 148.1s -> 60.2s
+#  * serve_bf16 + dp-replication: jamba long_500k collective 0.2255s -> ~0
+# Refuted (kept off): pv_bf16 (+7% mem), remat "dots" (+26% mem),
+#  ssm_bf16 (-10% alone but negligible at chunk 4096), ssm_chunk 128 (+50%).
+TUNED = PerfConfig(pv_bf16=False, additive_mask=True, flash_custom_vjp=True,
+                   remat_policy="block", ssm_bf16=False, ssm_chunk=4096,
+                   sp_activations=False,
+                   serve_bf16=True, serve_replicate_dp_below_gb=10.0)
+
+_local = threading.local()
+
+
+def set_perf(cfg: PerfConfig) -> None:
+    _local.cfg = cfg
+
+
+def get_perf() -> PerfConfig:
+    return getattr(_local, "cfg", BASELINE)

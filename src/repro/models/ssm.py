@@ -1,0 +1,178 @@
+"""Mamba-1 selective-SSM block (falcon-mamba / jamba mixers).
+
+TPU adaptation (DESIGN.md §3/§7): the CUDA selective-scan kernel becomes a
+chunked associative scan — ``lax.associative_scan`` inside fixed-size chunks
+(materialising [B, chunk, d_inner, N] tiles that fit VMEM-scale buffers) with
+a ``lax.scan`` carrying the inter-chunk state. Decode is the O(1) recurrent
+update. d_inner is tensor-sharded ("tp"); the scan state [B, d_inner, N]
+shards the same way, so the recurrence needs no collectives.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, SsmConfig
+from .layers import COMPUTE_DTYPE, PARAM_DTYPE, _init
+
+
+def _ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm or SsmConfig()
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return s, d_in, dt_rank
+
+
+def init_ssm(cfg: ModelConfig, key: jax.Array):
+    s, d_in, dt_rank = _ssm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    # S4D-real initialisation for A
+    a_init = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=PARAM_DTYPE)[None, :],
+                      (d_in, 1))
+    p: dict[str, Any] = {
+        "in_proj": _init(ks[0], (d, 2 * d_in)),            # x and gate z
+        "conv_w": _init(ks[1], (s.d_conv, d_in), scale=0.2),
+        "conv_b": jnp.zeros((d_in,), PARAM_DTYPE),
+        "x_proj": _init(ks[2], (d_in, dt_rank + 2 * s.d_state)),
+        "dt_proj": _init(ks[3], (dt_rank, d_in), scale=dt_rank ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(ks[4], (d_in,), PARAM_DTYPE)
+                             * (math.log(0.1) - math.log(0.001))
+                             + math.log(0.001)), 1e-4, None))),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((d_in,), PARAM_DTYPE),
+        "out_proj": _init(ks[5], (d_in, d),
+                          scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    specs = {
+        "in_proj": ("fsdp", "tp"),
+        "conv_w": (None, "tp"),
+        "conv_b": ("tp",),
+        "x_proj": ("tp", None),
+        "dt_proj": (None, "tp"),
+        "dt_bias": ("tp",),
+        "a_log": ("tp", None),
+        "d_skip": ("tp",),
+        "out_proj": ("tp", "fsdp"),
+    }
+    return p, specs
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv over [B,S,C] with kernel [K,C]. If ``state``
+    ([B, K-1, C], the trailing inputs) is given, runs in streaming mode and
+    returns the updated state."""
+    k = w.shape[0]
+    if state is not None:
+        xin = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xin[:, -(k - 1):, :]
+    else:
+        xin = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = xin[:, -(k - 1):, :]
+    out = sum(xin[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :], new_state
+
+
+def _selective_scan_chunked(x, dt, b_t, c_t, a, d_skip, h0, chunk: int):
+    """h_t = exp(dt_t ⊙ A) h_{t-1} + dt_t ⊙ (B_t ⊗ x_t);  y_t = C_t·h_t + D x_t.
+
+    x/dt [B,S,Di]; b_t/c_t [B,S,N]; a [Di,N]; h0 [B,Di,N].
+    Chunked: associative scan inside chunks, lax.scan across chunks.
+    """
+    bsz, s, d_in = x.shape
+    n = a.shape[1]
+    n_chunks = max(s // chunk, 1)
+    chunk = s // n_chunks
+    xr = x.reshape(bsz, n_chunks, chunk, d_in)
+    dtr = dt.reshape(bsz, n_chunks, chunk, d_in)
+    br = b_t.reshape(bsz, n_chunks, chunk, n)
+    cr = c_t.reshape(bsz, n_chunks, chunk, n)
+
+    from .perf import get_perf
+    scan_dtype = jnp.bfloat16 if get_perf().ssm_bf16 else jnp.float32
+
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc = inp                               # [B,chunk,...]
+        decay = jnp.exp(-dtc[..., None] * a[None, None])    # [B,c,Di,N]
+        inject = (dtc * xc)[..., None] * bc[:, :, None, :]  # [B,c,Di,N]
+        decay = decay.astype(scan_dtype)
+        inject = inject.astype(scan_dtype)
+
+        def comb(l, r):
+            al, bl = l
+            ar, br_ = r
+            return al * ar, bl * ar + br_
+
+        a_cum, b_cum = jax.lax.associative_scan(comb, (decay, inject), axis=1)
+        h_all = (a_cum.astype(jnp.float32) * h[:, None]
+                 + b_cum.astype(jnp.float32))               # [B,c,Di,N]
+        y = jnp.einsum("bcdn,bcn->bcd", h_all.astype(scan_dtype),
+                       cc.astype(scan_dtype),
+                       preferred_element_type=jnp.float32)
+        return h_all[:, -1], y
+
+    h, ys = jax.lax.scan(
+        lambda h, i: chunk_step(h, jax.tree.map(lambda t: t[:, i], (xr, dtr, br, cr))),
+        h0, jnp.arange(n_chunks))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, d_in)
+    return y + x * d_skip[None, None, :], h
+
+
+def ssm_block(cfg: ModelConfig, p: dict, x: jax.Array, *,
+              state: tuple[jax.Array, jax.Array] | None = None,
+              chunk: int | None = None):
+    """Mamba block. x [B,S,D].
+
+    state = (conv_state [B,K-1,Di], h [B,Di,N]) for streaming decode; None
+    for full-sequence (train/prefill) mode. Returns (y, new_state).
+    """
+    from .perf import get_perf
+    if chunk is None:
+        chunk = get_perf().ssm_chunk
+    s_cfg, d_in, dt_rank = _ssm_dims(cfg)
+    xc = x.astype(COMPUTE_DTYPE)
+    xz = xc @ p["in_proj"].astype(COMPUTE_DTYPE)            # [B,S,2Di]
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = state[0] if state is not None else None
+    xi, new_conv = _causal_conv(xi, p["conv_w"].astype(COMPUTE_DTYPE),
+                                p["conv_b"].astype(COMPUTE_DTYPE), conv_state)
+    xi = jax.nn.silu(xi)
+
+    proj = xi @ p["x_proj"].astype(COMPUTE_DTYPE)           # [B,S,R+2N]
+    dt_r = proj[..., :dt_rank]
+    b_t = proj[..., dt_rank:dt_rank + s_cfg.d_state].astype(jnp.float32)
+    c_t = proj[..., dt_rank + s_cfg.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (dt_r @ p["dt_proj"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+        + p["dt_bias"][None, None, :])                      # [B,S,Di]
+    a = jnp.exp(p["a_log"])                                 # [Di,N] (positive)
+
+    bsz = x.shape[0]
+    if state is not None:
+        h0 = state[1]
+    else:
+        h0 = jnp.zeros((bsz, d_in, s_cfg.d_state), jnp.float32)
+
+    if x.shape[1] == 1 and state is not None:
+        # O(1) decode update
+        decay = jnp.exp(-dt[:, 0, :, None] * a[None])       # [B,Di,N]
+        inject = (dt[:, 0] * xi[:, 0].astype(jnp.float32))[..., None] \
+            * b_t[:, 0, None, :]
+        h = decay * h0 + inject
+        y = jnp.einsum("bdn,bn->bd", h, c_t[:, 0])[:, None, :]
+        y = y + xi.astype(jnp.float32) * p["d_skip"][None, None, :]
+        new_h = h
+    else:
+        y, new_h = _selective_scan_chunked(
+            xi.astype(jnp.float32), dt, b_t, c_t, a, p["d_skip"], h0, chunk)
+
+    y = (y.astype(COMPUTE_DTYPE) * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(COMPUTE_DTYPE)
+    return out.astype(x.dtype), (new_conv, new_h)

@@ -1,0 +1,267 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh) — EXPERIMENTS.md §Roofline:
+
+    compute    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory     = HLO_bytes / HBM_bw               (per chip)
+    collective = collective_bytes / link_bw       (per chip link)
+
+``compiled.cost_analysis()`` supplies flops/bytes **but visits every
+while-loop body exactly once** — scanned layer stacks and flash-scan loops
+would be undercounted. We therefore walk the HLO text, multiply each
+while-body's ops by its static trip count (recovered from the loop-bound
+constant in the condition computation), and sum collective operand bytes
+the same way. MODEL_FLOPS (6·N·D analytic) is reported alongside as the
+useful-compute yardstick.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+from ..launch import mesh as M
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per device, loop-corrected
+    bytes_hbm: float             # per device, loop-corrected
+    coll_bytes: float            # per device, loop-corrected
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_global: float    # 6·N·D (or analytic serve flops)
+    useful_ratio: float          # model_flops_per_dev / hlo flops
+    raw_cost_analysis: dict
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _tensor_bytes(type_str: str) -> int:
+    """Bytes of one HLO shape string like 'bf16[8,128,4096]' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_hlo(hlo_text: str) -> dict:
+    """Walk HLO computations; per computation, collect collective operand
+    bytes, dot/convolution FLOPs (approx from output+contraction — we rely
+    on cost_analysis for flops instead), and while-loop trip counts.
+
+    Returns {"coll_bytes_flat": bytes ignoring loops,
+             "loops": [(body_name, trip_count)],
+             "coll_by_comp": {comp: bytes}, "calls": {comp: [callee...]}}
+    """
+    comp_name = None
+    coll_by_comp: dict[str, float] = {}
+    calls: dict[str, list[str]] = {}
+    loop_trips: dict[str, int] = {}          # body computation -> trip count
+    const_ints: dict[str, int] = {}          # per-comp constants (loop bounds)
+    comp_of_line: dict[str, str] = {}
+
+    # pass 1: computations, collectives, calls
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(%?[\w\.\-]+)\s*(\([^)]*\))?\s*->.*{$", s)
+        if s.endswith("{") and ("(" in s):
+            name = s.split()[0].lstrip("%")
+            comp_name = name
+            coll_by_comp.setdefault(comp_name, 0.0)
+            calls.setdefault(comp_name, [])
+            continue
+        if s == "}":
+            continue
+        if comp_name is None:
+            continue
+        # collective ops: count operand bytes (result side for all-gather)
+        for op in _COLLECTIVES:
+            if f" {op}(" in s or f"= {op}" in s.replace("-start", ""):
+                # result type is at '= TYPE op(...)'
+                mm = re.search(r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))\s+" +
+                               op.replace("-", r"\-"), s)
+                if mm:
+                    coll_by_comp[comp_name] = (coll_by_comp.get(comp_name, 0.0)
+                                               + _tensor_bytes(mm.group(1)))
+                break
+        # nested calls: to_apply=, body=, condition=, branch_computations
+        for key in ("to_apply=", "body=", "condition=", "called_computations="):
+            for mm in re.finditer(key + r"%?([\w\.\-]+)", s):
+                calls[comp_name].append(mm.group(1))
+        # while loops: remember body name; trip count resolved in pass 2
+        mm = re.search(r"while\(.*body=%?([\w\.\-]+)", s)
+        if mm:
+            loop_trips.setdefault(mm.group(1), -1)
+        # constants (potential loop bounds)
+        mm = re.search(r"=\s+s32\[\]\s+constant\((\d+)\)", s)
+        if mm and comp_name:
+            const_ints.setdefault(comp_name, 0)
+            const_ints[comp_name] = max(const_ints[comp_name], int(mm.group(1)))
+
+    # pass 2: resolve trip counts — take the max s32 constant in the loop's
+    # condition computation (XLA emits `compare(iter, constant(N))`)
+    cond_of_body: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        mm = re.search(r"while\(.*condition=%?([\w\.\-]+),.*body=%?([\w\.\-]+)",
+                       line)
+        if not mm:
+            mm2 = re.search(
+                r"while\(.*body=%?([\w\.\-]+),.*condition=%?([\w\.\-]+)", line)
+            if mm2:
+                cond_of_body[mm2.group(1)] = mm2.group(2)
+            continue
+        cond_of_body[mm.group(2)] = mm.group(1)
+    for body, cond in cond_of_body.items():
+        loop_trips[body] = max(const_ints.get(cond, 1), 1)
+
+    return {"coll_by_comp": coll_by_comp, "calls": calls,
+            "loops": loop_trips}
+
+
+def _weight_of_comp(comp: str, parsed: dict, cache: dict) -> float:
+    """Total collective bytes reachable from ``comp``, multiplying nested
+    while bodies by their trip counts."""
+    if comp in cache:
+        return cache[comp]
+    cache[comp] = 0.0  # cycle guard
+    total = parsed["coll_by_comp"].get(comp, 0.0)
+    for callee in parsed["calls"].get(comp, []):
+        sub = _weight_of_comp(callee, parsed, cache)
+        trip = parsed["loops"].get(callee, 0)
+        total += sub * (trip if trip and trip > 0 else 1)
+    cache[comp] = total
+    return total
+
+
+def collective_bytes(hlo_text: str) -> float:
+    parsed = parse_hlo(hlo_text)
+    roots = [c for c in parsed["coll_by_comp"]
+             if c.startswith("main") or c == "main"]
+    root = roots[0] if roots else next(iter(parsed["coll_by_comp"]), None)
+    if root is None:
+        return 0.0
+    return _weight_of_comp(root, parsed, {})
+
+
+def loop_corrected_costs(hlo_text: str, cost: dict) -> tuple[float, float]:
+    """Approximate loop correction for cost_analysis flops/bytes: scale them
+    by (Σ body_ops × trips) / (Σ body_ops) using op counts per computation
+    as the weight proxy. Conservative but catches the scan-over-layers
+    factor exactly when the loop body dominates (it does here)."""
+    parsed = parse_hlo(hlo_text)
+    # count "heavy" ops (dot/convolution/cumsum-scatter) per computation
+    weights: dict[str, float] = {}
+    comp = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and "(" in s:
+            comp = s.split()[0].lstrip("%")
+            weights.setdefault(comp, 0.0)
+            continue
+        if comp is None:
+            continue
+        if " dot(" in s or " convolution(" in s:
+            mm = re.search(r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))\s", s)
+            if mm:
+                weights[comp] += _tensor_bytes(mm.group(1))
+
+    def reach(comp, cache):
+        if comp in cache:
+            return cache[comp]
+        cache[comp] = 0.0
+        total = weights.get(comp, 0.0)
+        for callee in parsed["calls"].get(comp, []):
+            sub = reach(callee, cache)
+            trip = parsed["loops"].get(callee, 0)
+            total += sub * (trip if trip and trip > 0 else 1)
+        cache[comp] = total
+        return total
+
+    flat = sum(weights.values())
+    roots = [c for c in weights if c.startswith("main")]
+    root = roots[0] if roots else None
+    if root is None or flat <= 0:
+        return cost.get("flops", 0.0), cost.get("bytes accessed", 0.0)
+    corrected = reach(root, {})
+    factor = max(corrected / flat, 1.0)
+    return (cost.get("flops", 0.0) * factor,
+            cost.get("bytes accessed", 0.0) * factor)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs for the whole step (all chips)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention over the cache
+    tokens = shape.global_batch
+    flops = 2.0 * n_active * tokens
+    # attention reads over cache: 2·2·S·(kv heads·dh)·layers per sequence
+    kv_bytes_flops = 0.0
+    for li in range(cfg.n_layers):
+        kind = cfg.layer_pattern[li % len(cfg.layer_pattern)]
+        if kind == "ssm":
+            continue
+        if cfg.mla is not None:
+            width = cfg.mla.kv_lora
+            heads = cfg.n_heads
+            kv_bytes_flops += 2 * 2 * shape.seq_len * width * heads
+        else:
+            kv_bytes_flops += (2 * 2 * shape.seq_len
+                               * cfg.n_kv * cfg.head_dim
+                               * (cfg.n_heads // cfg.n_kv))
+    return flops + kv_bytes_flops * tokens
+
+
+def analyze(hlo_text: str, cost: dict, cfg, shape, n_chips: int) -> Roofline:
+    from .hlo_parse import analyze_hlo
+    h = analyze_hlo(hlo_text)
+    flops = h.flops
+    # memory term: prefer cost_analysis 'bytes accessed' corrected by the
+    # parser's loop-aware proxy ratio (cost_analysis visits loop bodies once)
+    cost_bytes = float(cost.get("bytes accessed", 0.0))
+    hbm = max(h.bytes_traffic, cost_bytes)
+    coll = h.coll_bytes
+    compute_s = flops / M.PEAK_FLOPS_BF16
+    memory_s = hbm / M.HBM_BW
+    coll_s = coll / M.ICI_BW
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", coll_s), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    useful = (mf / n_chips) / flops if flops else 0.0
+    r = Roofline(flops=flops, bytes_hbm=hbm, coll_bytes=coll,
+                 compute_s=compute_s, memory_s=memory_s,
+                 collective_s=coll_s, dominant=dom,
+                 model_flops_global=mf, useful_ratio=useful,
+                 raw_cost_analysis={k: float(v) for k, v in cost.items()
+                                    if isinstance(v, (int, float))})
+    r.raw_cost_analysis["coll_breakdown"] = {k: float(v)
+                                             for k, v in h.coll_breakdown.items()}
+    return r

@@ -1,0 +1,310 @@
+"""Assemble EXPERIMENTS.md from dry-run/perf/bench artifacts.
+
+    PYTHONPATH=src python -m repro.roofline.experiments_md > EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import os
+import statistics as st
+from collections import defaultdict
+
+from .report import dryrun_table, fmt_bytes, load, roofline_table
+
+
+def bench_rows(name: str) -> list[dict]:
+    path = f"experiments/bench/{name}.csv"
+    if not os.path.exists(path):
+        return []
+    return list(csv.DictReader(open(path)))
+
+
+def md_table(rows: list[dict], cols: list[str]) -> str:
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "---|" * len(cols)]
+    for r in rows:
+        out.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(out)
+
+
+def agg_fig7() -> list[dict]:
+    rows = bench_rows("fig7_comparison")
+    agg = defaultdict(list)
+    for r in rows:
+        agg[(r["dataset"], r["algo"])].append(r)
+    out = []
+    for (ds, algo), rs in sorted(agg.items()):
+        m = lambda k: st.mean(float(r[k]) for r in rs)
+        out.append({"dataset": ds, "algo": algo,
+                    "largest": f"{m('largest'):.2f}",
+                    "nstdev": f"{m('nstdev'):.3f}",
+                    "messages": f"{m('messages'):.0f}",
+                    "gain": f"{m('gain'):.3f}",
+                    "connected": f"{m('connected'):.2f}",
+                    "rounds": f"{m('rounds'):.0f}"})
+    return out
+
+
+def agg_fig5() -> list[dict]:
+    rows = bench_rows("fig5_k_sweep")
+    agg = defaultdict(list)
+    for r in rows:
+        agg[(r["dataset"], int(r["k"]), r["algo"])].append(r)
+    out = []
+    for (ds, k, algo), rs in sorted(agg.items()):
+        m = lambda kk: st.mean(float(r[kk]) for r in rs)
+        out.append({"dataset": ds, "K": k, "algo": algo,
+                    "rounds": f"{m('rounds'):.0f}",
+                    "largest": f"{m('largest'):.2f}",
+                    "nstdev": f"{m('nstdev'):.3f}",
+                    "messages": f"{m('messages'):.0f}",
+                    "gain": f"{m('gain'):.3f}"})
+    return out
+
+
+def agg_fig6() -> list[dict]:
+    rows = bench_rows("fig6_diameter")
+    agg = defaultdict(list)
+    for r in rows:
+        agg[(float(r["remap_frac"]), int(r["diameter_proxy"]))].append(r)
+    out = []
+    for (frac, diam), rs in sorted(agg.items(), key=lambda kv: -kv[0][1]):
+        m = lambda kk: st.mean(float(r[kk]) for r in rs)
+        out.append({"remap_frac": frac, "diameter(ecc)": diam,
+                    "rounds": f"{m('rounds'):.0f}",
+                    "largest": f"{m('largest'):.2f}",
+                    "nstdev": f"{m('nstdev'):.3f}",
+                    "messages": f"{m('messages'):.0f}",
+                    "gain": f"{m('gain'):.3f}",
+                    "disconnected%": f"{m('disconnected_pct'):.1f}"})
+    return out
+
+
+def perf_compare(base: list[dict], tuned: list[dict]) -> list[dict]:
+    tmap = {(r["arch"], r["shape"]): r for r in tuned
+            if r.get("status") == "ok" and r.get("mesh") == "16x16"}
+    out = []
+    for r in base:
+        if r.get("status") != "ok" or r.get("mesh") != "16x16":
+            continue
+        t = tmap.get((r["arch"], r["shape"]))
+        if not t:
+            continue
+        rb, rt = r["roofline"], t["roofline"]
+        bb = max(rb["compute_s"], rb["memory_s"], rb["collective_s"])
+        bt = max(rt["compute_s"], rt["memory_s"], rt["collective_s"])
+        out.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "bound_before_s": f"{bb:.4f}", "bound_after_s": f"{bt:.4f}",
+            "speedup": f"{bb / bt:.2f}x" if bt else "-",
+            "dominant_after": rt["dominant"],
+        })
+    return out
+
+
+def main() -> None:
+    recs = load("experiments/dryrun")
+    tuned = load("experiments/perf") if os.path.isdir("experiments/perf") else []
+
+    print("""# EXPERIMENTS
+
+All artifacts are reproducible in-container:
+
+```
+PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes   # §Dry-run baseline
+PYTHONPATH=src python -m repro.launch.dryrun --all --perf --out experiments/perf
+PYTHONPATH=src python -m benchmarks.run                            # §Paper-figures
+PYTHONPATH=src python -m repro.roofline.experiments_md > EXPERIMENTS.md
+```
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(`repro/launch/mesh.py`). The container is CPU-only: every number below is
+derived from the *compiled* SPMD artifact (lower+compile with 512 host
+devices), not wall-clock — see §Methodology.
+
+## Methodology (roofline terms)
+
+For each (arch × shape × mesh) cell, `repro.launch.dryrun`:
+1. builds `ShapeDtypeStruct` stand-ins for params / optimizer / batch /
+   KV-caches (no allocation), with logical shardings resolved on the
+   production mesh;
+2. `jax.jit(step).lower(...).compile()` — failures here (sharding
+   mismatch, OOM, bad collective) are system bugs; all 40 runnable cells
+   compile on BOTH meshes;
+3. derives the three roofline terms per chip:
+   * `compute = HLO_dot_FLOPs / 197e12` — exact matmul FLOPs parsed from
+     post-optimization HLO (`repro/roofline/hlo_parse.py`), **multiplied
+     through while-loop trip counts** (XLA's own `known_trip_count`), since
+     `compiled.cost_analysis()` visits loop bodies once;
+   * `memory = HLO_bytes / 819e9` — Σ(operand+output bytes) over
+     instructions, loop-corrected, fusion-internal tensors excluded;
+   * `collective = collective_bytes / 50e9` — all-gather counts output
+     bytes, all-reduce 2× operand, reduce-scatter/all-to-all/permute
+     operand bytes; loop-corrected, per chip.
+4. `MODEL_FLOPS` = 6·N_active·D (train), 2·N_active·D (prefill), decode
+   adds analytic KV-read FLOPs. `useful_ratio` = MODEL_FLOPS/chips ÷
+   HLO_FLOPs — remat recompute, attention-score FLOPs, head/vocab padding
+   and dead-expert padding all push it below 1.
+
+Caveats stated once: (a) the memory proxy counts XLA-CPU lowering, which
+inserts `copy` ops (esp. around scanned KV caches) that the TPU compiler
+elides via donation/aliasing — decode-cell memory terms are upper bounds;
+(b) the collective term divides by one link's bandwidth — a consistent
+cross-cell yardstick, not a ring-schedule simulation; (c) `temp_size`
+below is the CPU backend's buffer assignment — unfused f32 intermediates
+and unaliased scan stacks it reports do not exist in the TPU lowering, so
+big train cells show temp >> 16 GB. The *analytic* per-chip budget for the
+worst cell (deepseek-v2 train_4k: f32 params+Adam 11.1 GB fully sharded,
++0.67 GB/layer remat boundary) fits v5e HBM with the supported
+`microbatches=4` grad accumulation (train_step knob) or sequence-parallel
+activation sharding; serve cells fit outright (e.g. deepseek decode 12.6 GB
+argument+temp as measured).
+""")
+
+    print("\n## §Dry-run — single pod (16×16, 256 chips)\n")
+    print(dryrun_table(recs, "16x16"))
+    print("\n## §Dry-run — multi-pod (2×16×16, 512 chips)\n")
+    print(dryrun_table(recs, "2x16x16"))
+    print("""
+Skips are the 8 pure-full-attention archs × `long_500k` (sub-quadratic
+required; DESIGN.md §5) — they appear as `skipped` rows, per spec.
+""")
+
+    print("\n## §Roofline — baseline (paper-faithful substrate), single pod\n")
+    print(roofline_table(recs, "16x16"))
+    print("""
+Reading the table: *every train/prefill cell is memory-term dominated* in
+this pure-XLA lowering — the flash-softmax probability tiles, scan-stacked
+caches and remat recompute dominate HBM traffic; the MoE archs add
+collective load from tensor-parallel psums (tokens are batch-sharded,
+experts model-sharded, so combine is a psum over `model`). `useful_ratio`
+0.3–0.9 decomposes as: ~1.33× full-block remat recompute, attention-score
+FLOPs absent from 6·N·D, head-padding (qwen2-1.5b 12→16, llava 56→64,
+whisper 12→16 MHA) and expert padding (qwen2-moe 60→64).
+
+One sentence per dominant term on what would move it (expanded in §Perf):
+memory → keep flash probabilities in VMEM (Pallas kernel) and stop storing
+scan residuals (FA2 custom VJP — implemented); collective → sequence-
+parallel resharding or, for B=1 decode, weight-stationary placement
+(implemented); compute → nothing is compute-bound at these scales.
+""")
+
+    if tuned:
+        print("\n## §Perf — baseline vs optimized (all cells, single pod)\n")
+        print(md_table(perf_compare(recs, tuned),
+                       ["arch", "shape", "bound_before_s", "bound_after_s",
+                        "speedup", "dominant_after"]))
+
+    print("""
+### §Perf — hillclimb log (hypothesis → change → before → after → verdict)
+
+Three cells were hillclimbed per the spec: worst roofline fraction
+(falcon-mamba-7b × train_4k), most collective-bound (jamba-v0.1-52b ×
+long_500k), most representative of MoE/expert-parallel + biggest model
+(deepseek-v2-236b × train_4k). Dominant-term seconds per chip:
+
+| # | cell | hypothesis | change | before | after | verdict |
+|---|---|---|---|---|---|---|
+| 1 | falcon-mamba train_4k | bf16 scan intermediates halve the assoc-scan traffic | `ssm_bf16` | mem 148.1 | 132.7 | confirmed, weaker than 2× predicted (casts add copies) |
+| 2 | falcon-mamba train_4k | smaller chunks (128) reduce assoc-scan level count | `ssm_chunk=128` | 148.1 | 221.7 | **refuted** — per-chunk boundary tensors dominate; more chunks = more traffic |
+| 3 | falcon-mamba train_4k | inverted: FEWER chunks amortise boundaries | `ssm_chunk=512/1024/2048/4096` | 148.1 | 111.0 / 92.3 / 83.0 / **60.2** | confirmed — the outer chunk loop was pure overhead; full-seq assoc scan wins (2.46×) |
+| 4 | falcon-mamba train_4k | save-dots remat cuts recompute | `remat_policy=dots` | mem 148.1 / comp 1.06 | mem 156.9 / comp 0.87 | **refuted** for the dominant term (saved residual traffic exceeds recompute saved) |
+| 5 | deepseek-v2 train_4k | bf16 probs halve PV traffic | `pv_bf16` | mem 112.9 | 120.6 | **refuted** — the cast materialises an extra [B,H,S,blk] tensor in XLA |
+| 6 | deepseek-v2 train_4k | additive causal bias avoids the 10.8%-of-traffic select | `additive_mask` | 112.9 | 104.7 | confirmed (−7.3%) |
+| 7 | deepseek-v2 train_4k | FA2 custom VJP stops scan-transpose residual storage | `flash_custom_vjp` | 112.9 | **74.7** | confirmed (−34%); byte-attribution showed ~40% of traffic in scan-body/remat fusions |
+| 8 | jamba long_500k | B=1 decode is bound by FSDP weight all-gathers (≈11.3 GB/chip/step ≈ tp-shard of all weights); replicate weights across dp (they fit: 104 GB bf16 / 16 tp = 6.5 GB/chip) | `serve_bf16 + serve_replicate_dp` | coll 0.2255 | **0.0001** | confirmed (2250×); bound moves to memory 0.1505 (scan-stacked cache copies — CPU-lowering artifact, see caveats) |
+| 9 | all decode cells | dp-replication helps everywhere weights fit | apply knob 8 to every serve cell under 10 GB/chip | e.g. falcon decode 0.0250 | 0.1479 (**regression**) | **refuted** — when the batch shards over dp, FSDP gathers amortise across the batch and replication just multiplies weight reads; rule refined to `B < dp AND attention-bearing` (specs.py), regressions gone |
+
+Byte-attribution (iteration 7's evidence) is reproducible with the snippet
+in `experiments/README-perf-debug.md`.
+
+Stopping rule: after iterations 3/7/8 the next-best predicted wins on each
+cell were <5% XLA-level changes (further gains need the Pallas kernels —
+see below), so per the spec the loop stops.
+
+### Beyond-paper optimizations (kept; paper-faithful baseline preserved)
+
+* **FA2 custom-VJP flash attention** (`repro/models/flash_vjp.py`) —
+  validated grad-exact vs autodiff (`tests/test_flash_vjp.py`).
+* **Weight-stationary serving placement + bf16 serving** for every arch
+  whose tp-sharded weights fit one chip.
+* **Full-sequence associative selective scan** for SSM training.
+* **DFEP-balanced MoE expert placement** (`repro/core/moe_dfep.py`): the
+  paper's auction run on the expert co-activation graph; skewed-routing
+  imbalance max/mean 1.9 → ~1.1 (`examples/moe_rebalance.py`).
+* Pallas kernels for the paper's graph hot-spots (`repro/kernels/`):
+  lane_cumsum (DFEP step-1 ranks), frontier_min (ETSCH aggregation),
+  minplus_sweep (local relaxation) — interpret-validated vs jnp oracles;
+  on TPU they remove exactly the HBM round-trips the roofline flags.
+""")
+
+    print("\n## §Paper-figures (graph engine vs the paper's own claims)\n")
+    print("Scales: datasets are synthetic stand-ins at scale=0.12 of the "
+          "published |V| (generator params in `repro/core/graph.py`), "
+          "3 samples/point vs the paper's 100 — one CPU core. Qualitative "
+          "claims are what we validate.\n")
+    print("### Fig 5 — K sweep (astroph / usroads)\n")
+    print(md_table(agg_fig5(), ["dataset", "K", "algo", "rounds", "largest",
+                                "nstdev", "messages", "gain"]))
+    print("""
+Paper claims reproduced: NSTDEV and messages grow with K; rounds shrink
+with K; gain shrinks with K (fewer/larger partitions compress paths more).
+""")
+    print("### Fig 6 — diameter sweep (usroads, edge-remap protocol)\n")
+    print(md_table(agg_fig6(), ["remap_frac", "diameter(ecc)", "rounds",
+                                "largest", "nstdev", "messages", "gain",
+                                "disconnected%"]))
+    print("""
+Paper claims reproduced: rounds rise ~linearly with diameter; balance
+degrades (largest/NSTDEV up) with diameter; messages *fall* with diameter;
+gain rises with diameter.
+""")
+    print("### Fig 7 — DFEP vs DFEP-C vs JaBeJa (+ random/greedy)\n")
+    print(md_table(agg_fig7(), ["dataset", "algo", "largest", "nstdev",
+                                "messages", "gain", "connected", "rounds"]))
+    print("""
+Paper's headline result reproduced: on small-world graphs DFEP is better
+balanced than JaBeJa at similar gain; on the road network JaBeJa balances
+better **but needs ~19× the messages** (9084 vs 467 here; "roughly ten
+times higher" in the paper) and reaches lower gain (0.76 vs 0.97).
+DFEP partitions are connected; random/JaBeJa conversions are not. The
+PowerGraph-style greedy baseline (not in the paper) is strong on
+small-world balance+messages but it is a *sequential streaming* heuristic —
+on the road network its gain (0.70) still trails DFEP (0.97).
+""")
+    print("### Fig 8 — distributed DFEP scalability\n")
+    print(md_table(bench_rows("fig8_scalability"),
+                   ["ndev", "V", "E", "rounds", "wall_s", "edges_per_worker",
+                    "speedup_vs_1"]))
+    print("""
+Honest negative: this container has ONE physical core, so adding host
+"devices" adds orchestration overhead without parallel hardware — wall
+clock *degrades*; the structural quantities (per-worker edge shard, the
+psum-per-round schedule visible in the lowered HLO) are what transfer to a
+real fleet, where the paper measured >5× at 16 nodes. The per-round
+communication is two [V,K] psums — independent of worker count.
+""")
+    print("### Fig 9 — SSSP: ETSCH vs vertex-centric\n")
+    print(md_table(bench_rows("fig9_sssp"),
+                   ["dataset", "k", "etsch_supersteps",
+                    "vertex_centric_rounds", "gain", "etsch_wall_s",
+                    "baseline_wall_s", "partition_rounds"]))
+    print("""
+ETSCH needs strictly fewer synchronisation rounds than the one-hop-per-
+round vertex-centric baseline at every K (the paper's fig-9 effect; its
+y-axis is Hadoop wall-clock where sync rounds dominate). The small
+synthetic DBLP's eccentricity (4) quantises gain at 0.25 here; the
+diameter sweep (fig 6) shows gain up to 0.97 where paths are long.
+""")
+    print("### Kernel microbench\n")
+    print(md_table(bench_rows("kernel_bench"), ["name", "kernel_us", "ref_us"]))
+    print("""
+`kernel_us` is **interpret-mode** (Python executing the TPU kernel body for
+correctness) — not TPU performance; `ref_us` is the jnp oracle on CPU.
+""")
+
+
+if __name__ == "__main__":
+    main()

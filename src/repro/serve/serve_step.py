@@ -1,0 +1,77 @@
+"""Serving: prefill + single-token decode steps (the shapes the assigned
+``decode_*``/``long_*`` cells lower), plus a tiny batched engine.
+
+Decode attention with a sequence-sharded cache is the cross-chip
+flash-decoding split-K pattern (softmax max/sum lower to psums over the
+"tp"/"dp" axes holding the cache sequence — DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import lm
+
+
+def prefill(cfg: ModelConfig, params, tokens: jax.Array, **modality):
+    """Full-sequence forward collecting KV caches. Returns (logits, caches)."""
+    logits, _, caches = lm.forward_lm(cfg, params, tokens, remat=False,
+                                      collect_cache=True, **modality)
+    return logits, caches
+
+
+def decode(cfg: ModelConfig, params, token: jax.Array, caches,
+           cache_len: jax.Array, cross_kvs=None):
+    """One token for every sequence in the batch. token [B, 1]."""
+    logits, new_caches = lm.decode_step(cfg, params, token, caches,
+                                        cache_len, cross_kvs=cross_kvs)
+    return logits, new_caches
+
+
+def greedy_token(logits: jax.Array, vocab: int) -> jax.Array:
+    masked = jnp.where(jnp.arange(logits.shape[-1]) < vocab,
+                       logits, -jnp.inf)
+    return jnp.argmax(masked, axis=-1).astype(jnp.int32)
+
+
+class Engine:
+    """Minimal batched serving loop (example/driver use): prefill a batch of
+    prompts, then greedy-decode step by step with a shared jitted decode."""
+
+    def __init__(self, cfg: ModelConfig, params, s_max: int):
+        self.cfg, self.params, self.s_max = cfg, params, s_max
+        self._decode = jax.jit(
+            lambda p, t, c, n, x: decode(cfg, p, t, c, n, cross_kvs=x))
+
+    def generate(self, tokens: jax.Array, n_new: int,
+                 **modality) -> jax.Array:
+        cfg = self.cfg
+        b, s0 = tokens.shape
+        logits, caches = jax.jit(
+            partial(prefill, cfg))(self.params, tokens, **modality)
+        # grow prefill caches into s_max-capacity buffers
+        def grow(x):
+            if x.ndim >= 3 and x.shape[2] == s0:          # [R,B,S,...]
+                pad = [(0, 0)] * x.ndim
+                pad[2] = (0, self.s_max - s0)
+                return jnp.pad(x, pad)
+            return x
+        caches = jax.tree.map(grow, caches)
+        cross_kvs = None
+        if cfg.family == "encdec":
+            memory = lm._encode(cfg, self.params, modality["enc_frames"])
+            cross_kvs = lm.cross_kvs_from_memory(cfg, self.params, memory)
+
+        tok = greedy_token(logits[:, -1:, :], cfg.vocab)
+        out = [tok]
+        n = jnp.int32(s0)
+        for _ in range(n_new - 1):
+            logits, caches = self._decode(self.params, tok, caches, n, cross_kvs)
+            tok = greedy_token(logits[:, -1:, :], cfg.vocab)
+            out.append(tok)
+            n = n + 1
+        return jnp.concatenate(out, axis=1)

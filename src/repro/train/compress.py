@@ -1,0 +1,76 @@
+"""Gradient compression with error feedback (pod-axis sync; DESIGN.md §6).
+
+At 1000+ nodes the pod-level data-parallel all-reduce crosses DCI, the
+slowest link; int8 block-quantised gradients with error feedback cut that
+traffic 4× vs f32 (2× vs bf16) with no convergence loss in practice
+(1-bit-Adam/EF-SGD literature). The codec is pure function + carried error
+state, so it drops into the train step as a grad transform:
+
+    g_q, err = ef_compress(g + err_prev)        # quantise what we can,
+    g_synced = all_reduce(decompress(g_q))      # carry what we cannot
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Compressed(NamedTuple):
+    q: jax.Array          # int8 payload
+    scale: jax.Array      # f32 per-block scales
+
+
+def compress(x: jax.Array) -> Compressed:
+    """Symmetric int8 block quantisation of a float array (any shape)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(flat / jnp.maximum(scale, 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return Compressed(q, scale[:, 0])
+
+
+def decompress(c: Compressed, shape: tuple, dtype=jnp.float32) -> jax.Array:
+    flat = c.q.astype(jnp.float32) * c.scale[:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return flat.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def ef_compress_tree(grads: Any, err: Any) -> tuple[Any, Any, Any]:
+    """Error-feedback compression over a grad pytree.
+
+    Returns (decompressed grads to feed the optimizer/all-reduce,
+             new error state, compressed payloads for transport)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        c = compress(corrected)
+        d = decompress(c, g.shape)
+        return d, corrected - d, c
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]),
+            tdef.unflatten([o[2] for o in outs]))
+
+
+def init_error_state(grads_template: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_template)
+
+
+def compression_ratio(grads: Any) -> float:
+    """f32 bytes / compressed bytes for a grad pytree."""
+    f32 = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    comp = sum(g.size * 1 + (g.size // BLOCK + 1) * 4
+               for g in jax.tree.leaves(grads))
+    return f32 / comp

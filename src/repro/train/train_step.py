@@ -1,0 +1,82 @@
+"""Train step: causal-LM loss (+ MoE aux), grads, AdamW update.
+
+The loss masks padded-vocab logits and supports an optional microbatch
+(gradient-accumulation) loop for memory-bound cells (§Perf knob).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import lm
+from ..sharding.env import shard
+from .optimizer import AdamWConfig, OptState, apply_updates
+
+AUX_WEIGHT = 0.01
+
+
+def lm_loss(cfg: ModelConfig, params, batch: dict) -> tuple[jax.Array, dict]:
+    """batch: tokens [B,S], labels [B,S] (-100 = ignore), + modality extras."""
+    kw = {}
+    if cfg.family == "vlm":
+        kw["img_embeds"] = batch["img_embeds"]
+    if cfg.family == "encdec":
+        kw["enc_frames"] = batch["enc_frames"]
+    logits, aux, _ = lm.forward_lm(cfg, params, batch["tokens"], **kw)
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # image positions carry no loss
+        pad = jnp.full((labels.shape[0], cfg.n_img_tokens), -100, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+
+    vp = logits.shape[-1]
+    mask_v = jnp.arange(vp) < cfg.vocab
+    logits = jnp.where(mask_v[None, None, :], logits.astype(jnp.float32), -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+    tok_mask = (labels >= 0).astype(jnp.float32)
+    nll = (logz - gold) * tok_mask
+    ntok = jnp.maximum(jnp.sum(tok_mask), 1.0)
+    loss = jnp.sum(nll) / ntok
+    total = loss + AUX_WEIGHT * aux
+    return total, {"loss": loss, "aux": aux, "ntok": ntok}
+
+
+def train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, params,
+               opt_state: OptState, batch: dict, *, microbatches: int = 1):
+    """One optimizer step; optionally accumulates grads over microbatches."""
+    if microbatches <= 1:
+        (total, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch), has_aux=True)(params)
+    else:
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+        mb = jax.tree.map(split, batch)
+
+        def acc_fn(carry, mbatch):
+            g_acc, l_acc = carry
+            (total, m), g = jax.value_and_grad(
+                lambda p: lm_loss(cfg, p, mbatch), has_aux=True)(params)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + total), m
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, total), ms = jax.lax.scan(acc_fn, (g0, 0.0), mb)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        total = total / microbatches
+        metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
+
+    new_params, new_opt, opt_metrics = apply_updates(
+        opt_cfg, params, grads, opt_state)
+    metrics = dict(metrics, **opt_metrics, total=total)
+    return new_params, new_opt, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1):
+    return partial(train_step, cfg, opt_cfg, microbatches=microbatches)

@@ -1,0 +1,45 @@
+"""Dry-run integration: lower+compile cells on a small (2×4) mesh in a
+subprocess (8 host devices), exercising the full specs/shardings path the
+production 16×16 / 2×16×16 dry-run uses."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    from repro.launch import dryrun
+    from repro.launch import mesh as M
+
+    # shrink the production mesh for the test
+    M.make_production_mesh = lambda multi_pod=False: (
+        jax.make_mesh((2, 2, 2), ("pod", "data", "model")) if multi_pod
+        else jax.make_mesh((2, 4), ("data", "model")))
+
+    for arch, shape in [("qwen3-0.6b", "train_4k"),
+                        ("qwen2-moe-a2.7b", "decode_32k"),
+                        ("whisper-small", "decode_32k"),
+                        ("falcon-mamba-7b", "long_500k")]:
+        rec = dryrun.run_cell(arch, shape, multi_pod=False)
+        assert rec["status"] == "ok", (arch, shape, rec.get("error"))
+        assert rec["roofline"]["flops"] > 0
+    rec = dryrun.run_cell("qwen3-0.6b", "train_4k", multi_pod=True)
+    assert rec["status"] == "ok", rec.get("error")
+    print("DRYRUN_SMALL_OK")
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1500,
+                         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert "DRYRUN_SMALL_OK" in res.stdout, \
+        f"stdout:\n{res.stdout[-2000:]}\nstderr:\n{res.stderr[-3000:]}"

@@ -1,0 +1,102 @@
+"""Graph container/generator + baseline partitioner tests (incl. hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import baselines, graph, metrics
+
+
+def test_from_edge_array_dedup_and_selfloops():
+    edges = np.array([[0, 1], [1, 0], [2, 2], [1, 2], [1, 2]])
+    g = graph.from_edge_array(3, edges)
+    assert g.n_edges == 2  # (0,1) and (1,2)
+    u, v = g.as_numpy()
+    assert set(zip(u.tolist(), v.tolist())) == {(0, 1), (1, 2)}
+
+
+def test_degrees():
+    edges = np.array([[0, 1], [0, 2], [0, 3]])
+    g = graph.from_edge_array(4, edges)
+    assert np.asarray(g.degrees()).tolist() == [3, 1, 1, 1]
+
+
+@pytest.mark.parametrize("name", ["astroph", "usroads", "wordnet"])
+def test_dataset_profiles(name):
+    """Synthetic stand-ins land in the published |V|/|E| ballpark at scale."""
+    spec = graph.DATASETS[name]
+    g = graph.load_dataset(name, scale=0.05, seed=0)
+    assert g.n_vertices > 0.5 * spec.v_published * 0.05
+    # |E|/|V| ratio within 2x of published
+    pub_ratio = spec.e_published / spec.v_published
+    got_ratio = g.n_edges / g.n_vertices
+    assert 0.4 * pub_ratio < got_ratio < 2.5 * pub_ratio
+
+
+def test_road_network_has_large_diameter():
+    g = graph.road_network(20, 20, 0.2, seed=0)
+    from repro.core.algorithms import reference_sssp
+    _, rounds = reference_sssp(g, 0)
+    assert int(rounds) > 15  # diameter-class >> small-world
+
+
+def test_remap_edges_preserves_counts():
+    g = graph.watts_strogatz(300, 4, 0.0, seed=0)
+    g2 = graph.remap_edges(g, 0.3, seed=1)
+    assert g2.n_vertices == g.n_vertices
+    assert abs(g2.n_edges - g.n_edges) < 0.1 * g.n_edges  # dedup may drop a few
+
+
+@given(k=st.integers(2, 12), seed=st.integers(0, 10))
+@settings(max_examples=10, deadline=None)
+def test_random_partition_balance(k, seed):
+    g = graph.watts_strogatz(400, 4, 0.1, seed=0)
+    owner = baselines.random_partition(g, k, seed=seed)
+    own = np.asarray(owner)[np.asarray(g.edge_mask)]
+    assert own.min() >= 0 and own.max() < k
+    sizes = np.bincount(own, minlength=k)
+    assert sizes.max() < 2.0 * g.n_edges / k  # random is well balanced
+
+
+@given(k=st.integers(2, 12))
+@settings(max_examples=8, deadline=None)
+def test_hash_partition_deterministic_and_total(k):
+    g = graph.barabasi_albert(200, 3, seed=1)
+    a = baselines.hash_partition(g, k)
+    b = baselines.hash_partition(g, k)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    own = np.asarray(a)[np.asarray(g.edge_mask)]
+    assert own.min() >= 0 and own.max() < k
+
+
+def test_greedy_partition_valid_and_balanced():
+    g = graph.barabasi_albert(300, 3, seed=0)
+    owner = baselines.greedy_partition(g, 6, seed=0)
+    own = np.asarray(owner)[np.asarray(g.edge_mask)]
+    assert len(own) == g.n_edges and own.min() >= 0 and own.max() < 6
+    m = metrics.evaluate(g, owner, 6, compute_gain=False)
+    assert m.largest_norm < 1.6
+
+
+def test_jabeja_valid():
+    g = graph.watts_strogatz(400, 6, 0.1, seed=0)
+    owner, info = baselines.jabeja_partition(g, 5, seed=0, rounds=60)
+    own = np.asarray(owner)[np.asarray(g.edge_mask)]
+    assert own.min() >= 0 and own.max() < 5
+    assert info["rounds"] == 60
+
+
+def test_metrics_nstdev_zero_for_perfect():
+    sizes = np.array([10, 10, 10, 10])
+    assert metrics.nstdev(sizes, 40) == 0.0
+
+
+def test_messages_counts_frontier_replicas():
+    # path 0-1-2 split into 2 partitions at vertex 1: F_0={1}, F_1={1} → 2
+    g = graph.from_edge_array(3, np.array([[0, 1], [1, 2]]))
+    owner = jnp.where(g.edge_mask, jnp.asarray(
+        np.array([0, 1] + [0] * (g.e_pad - 2), np.int32)), -2)
+    m = metrics.evaluate(g, owner, 2, compute_gain=False)
+    assert m.messages == 2
+    assert m.frontier_total == 1
