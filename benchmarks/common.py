@@ -1,4 +1,4 @@
-"""Shared benchmark utilities: CSV emit, default reduced scales.
+"""Shared benchmark utilities: CSV/JSON emit, default reduced scales.
 
 The paper runs 100 samples per point on full SNAP graphs; one CPU core gets
 reduced scales + fewer samples (recorded per benchmark). Scale factors are
@@ -7,6 +7,7 @@ encoded here so EXPERIMENTS.md can state them exactly.
 from __future__ import annotations
 
 import csv
+import json
 import os
 import sys
 import time
@@ -31,6 +32,17 @@ def emit(name: str, rows: list[dict]) -> str:
         print(",".join(keys))
         for r in rows:
             print(",".join(str(r[k]) for k in keys))
+    return path
+
+
+def emit_json(name: str, payload: dict) -> str:
+    """Write a structured benchmark record to OUT_DIR/<name>.json."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"\n== {name} ==")
+    print(json.dumps(payload, indent=2, sort_keys=True))
     return path
 
 

@@ -16,7 +16,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig5,fig6,fig7,fig8,fig9,kernels,moe")
+                    help="comma list: fig5,fig6,fig7,fig8,fig9,fig10,kernels")
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
     if args.fast:
@@ -25,7 +25,7 @@ def main() -> None:
 
     # imports AFTER env so common.py picks the scales up
     from . import (fig5_k_sweep, fig6_diameter, fig7_comparison,
-                   fig8_scalability, fig9_sssp, kernel_bench)
+                   fig8_scalability, fig9_sssp, fig10_engine, kernel_bench)
 
     all_benches = {
         "fig5": fig5_k_sweep.main,
@@ -33,9 +33,14 @@ def main() -> None:
         "fig7": fig7_comparison.main,
         "fig8": fig8_scalability.main,
         "fig9": fig9_sssp.main,
+        "fig10": fig10_engine.main,
         "kernels": kernel_bench.main,
     }
     only = args.only.split(",") if args.only else list(all_benches)
+    unknown = sorted(set(only) - set(all_benches))
+    if unknown:
+        ap.error(f"unknown benchmark(s) {','.join(unknown)}; "
+                 f"available: {','.join(all_benches)}")
     for name in only:
         t0 = time.time()
         print(f"\n### running {name} ...", flush=True)

@@ -1,0 +1,156 @@
+"""Pallas TPU kernels for the partition-local engine layout.
+
+Two kernels, both specialized to the ``PartitionPlan`` CSR blocks:
+
+``segment_reduce``
+    The gather/aggregate hot-spot of a superstep: reduce per-half-edge
+    messages into per-target-vertex aggregates.  The CSR stream is sorted by
+    target, so this is a *segmented* scan.  TPU mapping follows
+    kernels/lane_cumsum.py: partitions are the 128-wide lane axis (each lane
+    is one partition's independent edge stream), the edge-slot axis is
+    blocked into [BLK_S, K] VMEM tiles walked sequentially, and a [1, K]
+    VMEM scratch carries the running value of each lane's open segment
+    across tiles.  Inside a tile the segmented combine runs as an
+    associative scan on (segment-start flag, value) pairs.  The caller then
+    picks each vertex's aggregate out of the scanned stream at
+    ``plan.last_slot`` (a plain gather; padding slots hold the identity
+    because the padding region starts a fresh identity-valued segment).
+
+``masked_update``
+    The frontier/replica-update step of the exchange: replicated slots take
+    the exchanged (cut-combined) value, private slots keep their local
+    value, padding slots are pinned to the identity.  Mirrors the masked
+    [K, V]-tile style of kernels/frontier_min.py.
+
+Both support combine ∈ {"min", "add"} (SSSP/WCC vs PageRank) and run in
+interpret mode on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_IDENTITY = {"min": jnp.inf, "add": 0.0}
+_OPS = {"min": jnp.minimum, "add": jnp.add}
+
+
+def _seg_kernel(flags_ref, vals_ref, o_ref, carry_ref, *, combine: str):
+    op = _OPS[combine]
+    ident = jnp.float32(_IDENTITY[combine])
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.full_like(carry_ref, ident)
+
+    f = flags_ref[...]                        # [BLK_S, K] bool
+    v = vals_ref[...]                         # [BLK_S, K] f32
+
+    def comb(a, b):
+        af, av = a
+        bf, bv = b
+        return af | bf, jnp.where(bf, bv, op(av, bv))
+
+    f_scan, v_scan = jax.lax.associative_scan(comb, (f, v), axis=0)
+    # rows before the tile's first segment start continue the carried segment
+    out = jnp.where(f_scan, v_scan, op(carry_ref[...], v_scan))
+    o_ref[...] = out
+    carry_ref[...] = out[-1:, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("combine", "block_s", "interpret"))
+def segment_scan(flags: jax.Array, vals: jax.Array, combine: str = "min",
+                 block_s: int = 1024, interpret: bool = True) -> jax.Array:
+    """Segmented inclusive scan along axis 0 of [S, K] streams.
+
+    ``flags[s, k]`` True starts a new segment in lane k.  Returns the
+    running combine of each open segment; the value at a segment's last row
+    is the full segment reduction.
+    """
+    s, k = vals.shape
+    ident = _IDENTITY[combine]
+    s_pad = -(-s // block_s) * block_s
+    k_pad = -(-k // 128) * 128
+    fp = jnp.zeros((s_pad, k_pad), jnp.bool_).at[:s, :k].set(flags)
+    # padding rows/lanes: identity values, no segment starts — harmless
+    vp = jnp.full((s_pad, k_pad), ident, jnp.float32).at[:s, :k].set(vals)
+    out = pl.pallas_call(
+        functools.partial(_seg_kernel, combine=combine),
+        grid=(s_pad // block_s,),
+        in_specs=[pl.BlockSpec((block_s, k_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((block_s, k_pad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_s, k_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_pad, k_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, k_pad), jnp.float32)],
+        interpret=interpret,
+    )(fp, vp)
+    return out[:s, :k]
+
+
+def segment_reduce(plan, messages: jax.Array, combine: str = "min",
+                   block_s: int = 1024, interpret: bool = True) -> jax.Array:
+    """Per-target aggregates over the plan's CSR stream.
+
+    messages [K, Emax] (identity at masked slots) -> aggregates [K, Vmax]
+    (identity at padding vertices).
+    """
+    ident = _IDENTITY[combine]
+    msgs = jnp.where(plan.emask, messages, ident)
+    scanned = segment_scan(plan.seg_start.T, msgs.T, combine=combine,
+                           block_s=block_s, interpret=interpret).T  # [K, Emax]
+    rows = jnp.arange(plan.k, dtype=jnp.int32)[:, None]
+    agg = scanned[rows, plan.last_slot]                             # [K, Vmax]
+    return jnp.where(plan.vmask, agg, ident)
+
+
+def segment_reduce_ref(plan, messages: jax.Array,
+                       combine: str = "min") -> jax.Array:
+    """XLA scatter reference (also the shard_map-path implementation)."""
+    ident = _IDENTITY[combine]
+    msgs = jnp.where(plan.emask, messages, ident)
+    rows = jnp.arange(plan.edge_tgt.shape[0], dtype=jnp.int32)[:, None]
+    out = jnp.full((plan.edge_tgt.shape[0], plan.v_max), ident, jnp.float32)
+    if combine == "min":
+        out = out.at[rows, plan.edge_tgt].min(msgs)
+    else:  # msgs already masked to the add identity 0.0
+        out = out.at[rows, plan.edge_tgt].add(msgs)
+    return jnp.where(plan.vmask, out, ident)
+
+
+def _update_kernel(state_ref, inc_ref, vmask_ref, rep_ref, o_ref, *,
+                   combine: str):
+    ident = jnp.float32(_IDENTITY[combine])
+    st = state_ref[...]
+    inc = inc_ref[...]
+    new = jnp.where(rep_ref[...], inc, st)
+    o_ref[...] = jnp.where(vmask_ref[...], new, ident)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("combine", "block_v", "interpret"))
+def masked_update(state: jax.Array, incoming: jax.Array, vmask: jax.Array,
+                  replicated: jax.Array, combine: str = "min",
+                  block_v: int = 2048, interpret: bool = True) -> jax.Array:
+    """Apply exchanged values to replicated slots: state/incoming [K, Vmax]."""
+    k, v = state.shape
+    ident = _IDENTITY[combine]
+    k_pad = -(-k // 8) * 8
+    v_pad = -(-v // block_v) * block_v
+    sp = jnp.full((k_pad, v_pad), ident, jnp.float32).at[:k, :v].set(state)
+    ip = jnp.full((k_pad, v_pad), ident, jnp.float32).at[:k, :v].set(incoming)
+    mp = jnp.zeros((k_pad, v_pad), jnp.bool_).at[:k, :v].set(vmask)
+    rp = jnp.zeros((k_pad, v_pad), jnp.bool_).at[:k, :v].set(replicated)
+    out = pl.pallas_call(
+        functools.partial(_update_kernel, combine=combine),
+        grid=(v_pad // block_v,),
+        in_specs=[pl.BlockSpec((k_pad, block_v), lambda i: (0, i))] * 4,
+        out_specs=pl.BlockSpec((k_pad, block_v), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k_pad, v_pad), jnp.float32),
+        interpret=interpret,
+    )(sp, ip, mp, rp)
+    return out[:k, :v]

@@ -1,0 +1,194 @@
+"""Compile a Graph + edge-partition assignment into an executable plan.
+
+The ETSCH runtime in ``core/etsch.py`` keeps per-partition state as a dense
+``[K, V]`` matrix — every partition carries a slot for every global vertex,
+so memory and sweep cost scale with ``K * V`` regardless of how good the
+partitioning is.  The engine instead *compacts* each partition to the
+vertices it actually touches:
+
+  * each partition i gets a local id space ``0 .. n_local[i]`` over the
+    endpoints of its owned edges (``local2global`` maps back),
+  * owned undirected edges are expanded to two directed half-edges and laid
+    out in CSR order by target local id — the layout the segment-reduce
+    kernel (engine/kernels.py) consumes,
+  * the replica-exchange plan records which local slots are replicas of a
+    vertex that also lives in other partitions (``replicated``), and which
+    partition is the designated master (``is_master``, lowest partition id).
+
+Only replicated slots ever need to cross the partition boundary during a
+superstep: a vertex that lives in a single partition has *all* of its
+incident edges there (edge partitioning guarantees this), so its aggregate
+is already complete locally.  Per-superstep exchange volume is therefore
+exactly ``sum(replicated)`` = Σ|F_i| — the paper's MESSAGES metric (§V-A),
+which ``core/metrics.py`` computes combinatorially; the engine gives the
+same number operationally (see tests/test_metrics_engine.py).
+
+All arrays are padded to static lane-aligned shapes so every superstep jits
+and shard_maps: ``v_max`` / ``e_max`` are the max over partitions, rounded
+up to 128, with at least one guaranteed padding slot in the edge stream
+(the segment-scan parks degree-0 / padding vertices there).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.graph import Graph
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """Per-partition compacted CSR blocks + replica exchange plan."""
+
+    # static
+    k: int                   # number of partitions
+    n_vertices: int          # global |V|
+    v_max: int               # padded local-vertex capacity
+    e_max: int               # padded directed-half-edge capacity (>= 1 pad slot)
+    exchange_volume: int     # Σ|F_i| — replica slots crossing the cut/superstep
+    sum_local_vertices: int  # Σ|V_i|
+
+    # local vertex space
+    local2global: jax.Array  # [K, Vmax] int32 — global id per local slot (pad: 0)
+    vmask: jax.Array         # [K, Vmax] bool  — slot holds a real vertex
+    # CSR half-edge stream, sorted by target local id
+    edge_tgt: jax.Array      # [K, Emax] int32 — target local id (nondecreasing)
+    edge_nbr: jax.Array      # [K, Emax] int32 — neighbour local id
+    emask: jax.Array         # [K, Emax] bool  — real half-edge
+    seg_start: jax.Array     # [K, Emax] bool  — first half-edge of its target
+    last_slot: jax.Array     # [K, Vmax] int32 — last CSR slot per target
+                             #   (pad vertices -> a pad edge slot holding identity)
+    # replica exchange plan
+    replicated: jax.Array    # [K, Vmax] bool — vertex also lives elsewhere
+    is_master: jax.Array     # [K, Vmax] bool — this partition owns the vertex
+    n_local: jax.Array       # [K] int32 — real local vertices per partition
+    n_edges_local: jax.Array # [K] int32 — real owned (undirected) edges
+
+    def tree_flatten(self):
+        children = (self.local2global, self.vmask, self.edge_tgt,
+                    self.edge_nbr, self.emask, self.seg_start, self.last_slot,
+                    self.replicated, self.is_master, self.n_local,
+                    self.n_edges_local)
+        return children, (self.k, self.n_vertices, self.v_max, self.e_max,
+                          self.exchange_volume, self.sum_local_vertices)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*aux, *children)
+
+    # -- replica-exchange accounting (compile-time constants) ---------------
+    def exchange_per_superstep(self) -> int:
+        """Vertex states crossing the cut per superstep: Σ|F_i| (MESSAGES)."""
+        return self.exchange_volume
+
+    def replication_factor(self) -> float:
+        """Σ|V_i| / |V| — the paper's replication factor."""
+        return self.sum_local_vertices / max(self.n_vertices, 1)
+
+    def local_edges(self) -> list[np.ndarray]:
+        """Per-partition [e_i, 2] arrays of owned undirected edges (global
+        ids, u < v) — used by the round-trip test."""
+        l2g = np.asarray(self.local2global)
+        tgt = np.asarray(self.edge_tgt)
+        nbr = np.asarray(self.edge_nbr)
+        em = np.asarray(self.emask)
+        out = []
+        for i in range(self.k):
+            t = l2g[i, tgt[i, em[i]]]
+            n = l2g[i, nbr[i, em[i]]]
+            u, v = np.minimum(t, n), np.maximum(t, n)
+            # every undirected edge appears as two half-edges
+            pairs = np.unique(np.stack([u, v], 1), axis=0)
+            out.append(pairs)
+        return out
+
+
+def _align(x: int, to: int = 128) -> int:
+    return max(to, -(-x // to) * to)
+
+
+def compile_plan(g: Graph, owner, k: int) -> PartitionPlan:
+    """Host-side compilation (numpy): bucket, compact, CSR-sort, pad."""
+    owner = np.asarray(owner)
+    u = np.asarray(g.src)
+    v = np.asarray(g.dst)
+    em = np.asarray(g.edge_mask)
+    u, v, owner = u[em], v[em], owner[em]
+    assert len(u) == 0 or (owner.min() >= 0 and owner.max() < k), \
+        "owner must assign every real edge to [0, k)"
+
+    # per-partition compacted vertex sets ---------------------------------
+    locals_: list[np.ndarray] = []
+    for i in range(k):
+        sel = owner == i
+        locals_.append(np.unique(np.concatenate([u[sel], v[sel]])))
+    n_local = np.array([len(x) for x in locals_], np.int32)
+    e_cnt = np.array([int((owner == i).sum()) for i in range(k)], np.int32)
+    v_max = _align(int(n_local.max(initial=1)))
+    # 2 half-edges per owned edge; +1 guarantees a padding slot for last_slot
+    e_max = _align(int(2 * e_cnt.max(initial=1)) + 1)
+
+    l2g = np.zeros((k, v_max), np.int32)
+    vmask = np.zeros((k, v_max), bool)
+    tgt = np.zeros((k, e_max), np.int32)
+    nbr = np.zeros((k, e_max), np.int32)
+    emask_p = np.zeros((k, e_max), bool)
+    seg_start = np.zeros((k, e_max), bool)
+    # degree-0/pad vertices point at the last slot, which is always padding
+    last_slot = np.full((k, v_max), e_max - 1, np.int32)
+
+    for i in range(k):
+        verts = locals_[i]
+        nl = len(verts)
+        l2g[i, :nl] = verts
+        vmask[i, :nl] = True
+        sel = owner == i
+        g2l = np.zeros(g.n_vertices, np.int64)
+        g2l[verts] = np.arange(nl)
+        ut, vt = g2l[u[sel]], g2l[v[sel]]
+        t = np.concatenate([ut, vt])            # half-edge targets
+        n = np.concatenate([vt, ut])            # half-edge sources
+        order = np.argsort(t, kind="stable")
+        t, n = t[order], n[order]
+        ne = len(t)
+        tgt[i, :ne] = t
+        nbr[i, :ne] = n
+        emask_p[i, :ne] = True
+        if ne:
+            seg_start[i, 0] = True
+            seg_start[i, 1:ne] = t[1:] != t[:-1]
+            # last slot of each target's run
+            is_last = np.ones(ne, bool)
+            is_last[:-1] = t[1:] != t[:-1]
+            last_slot[i, t[is_last]] = np.flatnonzero(is_last)
+        # padding region starts a fresh (identity-valued) segment
+        if ne < e_max:
+            seg_start[i, ne] = True
+
+    # replica exchange plan ------------------------------------------------
+    copies = np.zeros(g.n_vertices, np.int32)
+    for i in range(k):
+        copies[locals_[i]] += 1
+    master_of = np.full(g.n_vertices, -1, np.int32)
+    for i in reversed(range(k)):                # lowest partition id wins
+        master_of[locals_[i]] = i
+    replicated = vmask & (copies[l2g] >= 2)
+    is_master = vmask & (master_of[l2g] == np.arange(k)[:, None])
+
+    return PartitionPlan(
+        k=int(k), n_vertices=int(g.n_vertices), v_max=int(v_max),
+        e_max=int(e_max),
+        exchange_volume=int(replicated.sum()),
+        sum_local_vertices=int(vmask.sum()),
+        local2global=jnp.asarray(l2g), vmask=jnp.asarray(vmask),
+        edge_tgt=jnp.asarray(tgt), edge_nbr=jnp.asarray(nbr),
+        emask=jnp.asarray(emask_p), seg_start=jnp.asarray(seg_start),
+        last_slot=jnp.asarray(last_slot),
+        replicated=jnp.asarray(replicated), is_master=jnp.asarray(is_master),
+        n_local=jnp.asarray(n_local), n_edges_local=jnp.asarray(e_cnt),
+    )

@@ -130,6 +130,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         except Exception:
             rec["memory_analysis"] = {"repr": repr(mem)}
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jaxlib returns [dict]
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         roof = RA.analyze(hlo, cost, cfg, shape, n_chips)
         rec["roofline"] = roof.to_json()

@@ -149,12 +149,13 @@ def _first_operands(ins: Instr, sym: dict, n: int = 2) -> list[str]:
     args = []
     cur = ""
     for ch in ins.args:
-        if ch == "(":
+        # commas inside shapes/layouts (f32[128,128]{1,0}) are not separators
+        if ch in "([{":
             depth += 1
-        elif ch == ")":
-            if depth == 0:
+        elif ch in ")]}":
+            if ch == ")" and depth == 0:
                 break
-            depth -= 1
+            depth = max(depth - 1, 0)
         if ch == "," and depth == 0:
             args.append(cur)
             cur = ""
