@@ -1,0 +1,135 @@
+"""Streaming subsystem benchmark: incremental maintenance vs from-scratch.
+
+Drives a ``StreamSession`` through a sequence of insertion+deletion batches
+(~a few % of |E| each) and reports, per batch wave:
+
+  * ingest throughput (edge updates applied per second, end-to-end:
+    slot ingest + HDRF assignment + plan patch),
+  * re-auction frequency and region sizes (drift-triggered),
+  * replication-factor drift of incremental maintenance vs a full DFEP
+    re-run on the final mutated graph,
+  * the plan-patch vs full-recompile wall-clock gap, including the first
+    post-update query: the patched plan answers warm (jit cache hit) while
+    a recompiled plan pays the retrace — the streaming subsystem's reason
+    to exist, in seconds.
+
+Emits ``BENCH_stream.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import dfep, graph
+from repro import engine as E
+from repro import stream as S
+from repro.engine import runtime
+
+from .common import SCALE, emit_json
+
+
+def run(dataset: str = "email-enron", scale: float = SCALE, k: int = 8,
+        n_batches: int = 4, batch_frac: float = 0.04,
+        drift_threshold: float = 0.05) -> dict:
+    g = graph.load_dataset(dataset, scale=scale, seed=0)
+    rng = np.random.default_rng(0)
+    sess = S.StreamSession(g, S.StreamConfig(
+        k=k, chunk_size=256, drift_threshold=drift_threshold), key=0)
+
+    # warm the engine's jit cache once
+    jax.block_until_ready(E.engine_sssp(sess.engine, 0).state)
+
+    waves = []
+    for b in range(n_batches):
+        gu, gv = sess.graph().as_numpy()
+        n_mut = max(1, int(batch_frac * len(gu)))
+        idx = rng.choice(len(gu), size=n_mut, replace=False)
+        dels = np.stack([gu[idx], gv[idx]], 1)
+        ins = rng.integers(0, g.n_vertices, size=(n_mut, 2))
+
+        t0 = time.time()
+        stats = sess.apply(inserts=ins, deletes=dels)
+        apply_s = time.time() - t0
+
+        traced_before = runtime.TRACE_COUNTER["run_loop"]
+        t0 = time.time()
+        jax.block_until_ready(E.engine_sssp(sess.engine, 0).state)
+        query_after_patch_s = time.time() - t0
+
+        waves.append({
+            "batch": b,
+            "updates": int(2 * n_mut),
+            "updates_per_s": round(2 * n_mut / max(apply_s, 1e-9), 1),
+            "apply_s": round(apply_s, 4),
+            "rf": round(stats["rf"], 4),
+            "reauction": stats["reauction"],
+            "recompiles": stats["recompiles"],
+            "query_after_patch_s": round(query_after_patch_s, 4),
+            "query_retraced": runtime.TRACE_COUNTER["run_loop"]
+                              > traced_before,
+        })
+
+    # plan-patch vs full-recompile wall-clock on one more batch ------------
+    gu, gv = sess.graph().as_numpy()
+    n_mut = max(1, int(batch_frac * len(gu)))
+    idx = rng.choice(len(gu), size=n_mut, replace=False)
+    live = np.flatnonzero(np.asarray(sess.graph().edge_mask))
+    changes = [S.EdgeChange(int(gu[i]), int(gv[i]),
+                            int(sess.owner[live[i]]), -1) for i in idx]
+    t0 = time.time()
+    patched = S.patch_plan(sess.plan, changes)
+    patch_s = time.time() - t0
+    t0 = time.time()
+    recompiled = E.compile_plan(sess.graph(), sess.owner, k,
+                                epoch=sess.epoch + 1)
+    recompile_s = time.time() - t0
+
+    # first query on each: the patched plan hits the warm jit cache, the
+    # recompiled plan (new epoch => new treedef) must retrace
+    t0 = time.time()
+    jax.block_until_ready(E.engine_sssp(sess.engine.with_plan(patched),
+                                        0).state)
+    query_patched_s = time.time() - t0
+    t0 = time.time()
+    jax.block_until_ready(E.engine_sssp(sess.engine.with_plan(recompiled),
+                                        0).state)
+    query_recompiled_s = time.time() - t0
+
+    # incremental vs full re-run on the final mutated graph ----------------
+    g_final = sess.graph()
+    t0 = time.time()
+    owner_full, info_full = dfep.partition(g_final, k=k, key=1)
+    full_dfep_s = time.time() - t0
+    rf_full = E.compile_plan(g_final, np.asarray(owner_full),
+                             k).replication_factor()
+    rf_inc = sess.replication_factor()
+
+    return {
+        "dataset": dataset, "scale": scale, "k": k,
+        "n_vertices": g.n_vertices, "n_edges_initial": g.n_edges,
+        "n_edges_final": g_final.n_edges,
+        "batch_frac": batch_frac,
+        "waves": waves,
+        "total_ingested": sess.n_ingested,
+        "patches": sess.n_patches,
+        "recompiles": sess.n_recompiles,
+        "reauctions": sess.n_reauctions,
+        "rf_incremental": round(rf_inc, 4),
+        "rf_full_rerun": round(rf_full, 4),
+        "rf_drift_vs_full": round(rf_inc / rf_full - 1.0, 4),
+        "full_dfep_rerun_s": round(full_dfep_s, 3),
+        "plan_patch_s": round(patch_s, 4),
+        "plan_recompile_s": round(recompile_s, 4),
+        "query_after_patch_s": round(query_patched_s, 4),
+        "query_after_recompile_s": round(query_recompiled_s, 4),
+    }
+
+
+def main() -> None:
+    emit_json("BENCH_stream", run())
+
+
+if __name__ == "__main__":
+    main()

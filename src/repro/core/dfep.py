@@ -132,9 +132,18 @@ def _sizes(owner: jax.Array, k: int) -> jax.Array:
     return jnp.sum(onehot.astype(jnp.int32), axis=0)
 
 
-def _round(g: Graph, slots: Slots, cfg: DfepConfig, state: DfepState) -> DfepState:
+def _round(g: Graph, slots: Slots, cfg: DfepConfig, state: DfepState,
+           active: jax.Array | None = None,
+           grant_v: jax.Array | None = None) -> DfepState:
+    """One auction round. ``active`` (default: every real edge) restricts
+    steps 1–2 to a subset of edges — the bounded local re-auction of the
+    streaming subsystem runs the same machinery with ``active`` set to the
+    h-hop region around touched vertices and ``grant_v`` restricting step-3
+    grants to region vertices. With both None this is exactly the paper's
+    full-graph round."""
     k = cfg.k
-    u, v, emask = g.src, g.dst, g.edge_mask
+    u, v = g.src, g.dst
+    emask = g.edge_mask if active is None else (g.edge_mask & active)
     owner, mv = state.owner, state.mv
     part_ids = jnp.arange(k, dtype=jnp.int32)
 
@@ -238,6 +247,8 @@ def _round(g: Graph, slots: Slots, cfg: DfepConfig, state: DfepState) -> DfepSta
     presence = presence | owned_at
     has_frontier = jnp.any(fr_u, axis=0)                             # [K]
     presence = jnp.where(has_frontier[None, :], fr_u, presence)
+    if grant_v is not None:   # local re-auction: grants stay in the region
+        presence = presence & grant_v[:, None]
     pres_i = presence.astype(jnp.int32)
     n_pres = jnp.maximum(jnp.sum(pres_i, axis=0), 1)                 # [K]
     p_base = grant // n_pres
@@ -270,6 +281,64 @@ def run_dfep(g: Graph, slots: Slots, cfg: DfepConfig, key: jax.Array) -> DfepSta
                 & (s.stalled < cfg.stall_rounds))
 
     return jax.lax.while_loop(cond, lambda s: _round(g, slots, cfg, s), state)
+
+
+# ---------------------------------------------------------------------------
+# Incremental (region-restricted) DFEP — entry points for repro.stream
+# ---------------------------------------------------------------------------
+
+def init_region_state(g: Graph, cfg: DfepConfig, owner: jax.Array,
+                      active: jax.Array, region_v: jax.Array) -> DfepState:
+    """Seed a bounded local re-auction.
+
+    Edges under ``active`` are released (owner -> FREE); each partition gets
+    ``ceil(|active| / K)`` units spread over its presence vertices *inside*
+    the region (anchoring the auction to its existing territory). A
+    partition with no region presence seeds at the first region vertex, like
+    Algorithm 3's random start.
+    """
+    k = cfg.k
+    owner0 = jnp.where(active, jnp.int32(FREE), owner)
+    n_active = jnp.sum(active.astype(jnp.int32))
+    funding = -(-n_active // k)                                      # ceil
+    # partition presence at region vertices (from still-owned edges)
+    part_ids = jnp.arange(k, dtype=jnp.int32)
+    owned = (owner0[:, None] == part_ids[None, :]) & g.edge_mask[:, None]
+    pres = jnp.zeros((g.n_vertices, k), jnp.bool_)
+    pres = pres.at[g.src].max(owned).at[g.dst].max(owned)
+    pres = pres & region_v[:, None]
+    pres_i = pres.astype(jnp.int32)
+    cnt = jnp.sum(pres_i, axis=0)                                    # [K]
+    safe = jnp.maximum(cnt, 1)
+    base = funding // safe
+    rem = funding - base * safe
+    rank = jnp.cumsum(pres_i, axis=0) - pres_i
+    mv = pres_i * (base[None, :] + (rank < rem[None, :]).astype(jnp.int32))
+    # no-presence fallback: everything at the first region vertex
+    fallback = jnp.argmax(region_v).astype(jnp.int32)
+    mv = mv.at[fallback].add(jnp.where(cnt == 0, funding, 0))
+    return DfepState(owner0, mv, jnp.int32(0), jnp.int32(0))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def run_dfep_region(g: Graph, slots: Slots, cfg: DfepConfig,
+                    owner: jax.Array, active: jax.Array,
+                    region_v: jax.Array) -> DfepState:
+    """DFEP steps 1–2 (plus region-restricted step-3 grants) over only the
+    ``active`` edges, holding every other assignment fixed. This is the
+    bounded local re-auction the streaming subsystem runs when replication
+    drift crosses its threshold; cost scales with the region, not |E|."""
+    state = init_region_state(g, cfg, owner, active, region_v)
+
+    def cond(s: DfepState):
+        unsold = jnp.sum(jnp.where(s.owner == FREE, 1, 0))
+        return ((unsold > 0)
+                & (s.rounds < cfg.max_rounds)
+                & (s.stalled < cfg.stall_rounds))
+
+    return jax.lax.while_loop(
+        cond, lambda s: _round(g, slots, cfg, s, active=active,
+                               grant_v=region_v), state)
 
 
 @partial(jax.jit, static_argnames=("k",))

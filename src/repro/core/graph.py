@@ -15,6 +15,7 @@ class and clustering-coefficient class — see DESIGN.md §7).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from functools import partial
 from typing import Callable
 
@@ -60,6 +61,38 @@ class Graph:
     def as_numpy(self) -> tuple[np.ndarray, np.ndarray]:
         m = np.asarray(self.edge_mask)
         return np.asarray(self.src)[m], np.asarray(self.dst)[m]
+
+    def fingerprint(self) -> str:
+        """Stable content hash over the *masked* edge set.
+
+        Invariant under slot order and padding size: two graphs with the
+        same vertices and the same real (u, v) set hash identically. Used to
+        key the engine's plan cache (compile_plan_cached) so logically equal
+        graphs share compiled plans regardless of object identity.
+        """
+        u, v = self.as_numpy()
+        keys = np.sort(u.astype(np.int64) * self.n_vertices + v)
+        h = hashlib.sha256()
+        h.update(np.int64(self.n_vertices).tobytes())
+        h.update(keys.tobytes())
+        return h.hexdigest()
+
+
+def apply_edge_updates(g: Graph, slots: np.ndarray, new_src: np.ndarray,
+                       new_dst: np.ndarray, new_mask: np.ndarray) -> Graph:
+    """Functional slot-level mutation: write (src, dst, mask) at ``slots``.
+
+    ``StreamingGraph.graph()`` (repro.stream.ingest) materialises mutated
+    graphs through this: insertions claim masked (spare) slots, deletions
+    clear ``edge_mask``, and only the dirty slots are rewritten on device.
+    Shapes never change, so plans and jitted programs keyed on the padded
+    shape stay valid.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    src = g.src.at[slots].set(jnp.asarray(new_src, jnp.int32))
+    dst = g.dst.at[slots].set(jnp.asarray(new_dst, jnp.int32))
+    mask = g.edge_mask.at[slots].set(jnp.asarray(new_mask, bool))
+    return Graph(g.n_vertices, int(jnp.sum(mask)), src, dst, mask)
 
 
 def from_edge_array(n_vertices: int, edges: np.ndarray, pad_to: int | None = None) -> Graph:

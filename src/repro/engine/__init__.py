@@ -3,13 +3,15 @@
 Pipeline: partition (core/dfep.py, core/baselines.py) → compile_plan →
 Engine.run(program). See src/repro/engine/README.md for the design.
 """
-from .plan import PartitionPlan, compile_plan
-from .runtime import EdgeProgram, Engine, EngineResult
+from .plan import (PartitionPlan, compile_plan, compile_plan_cached,
+                   plan_cache_clear)
+from .runtime import TRACE_COUNTER, EdgeProgram, Engine, EngineResult
 from .programs import (PAGERANK, SSSP, WCC, engine_pagerank, engine_sssp,
                        engine_wcc, multi_source_sssp)
 
 __all__ = [
-    "PartitionPlan", "compile_plan", "EdgeProgram", "Engine", "EngineResult",
-    "SSSP", "WCC", "PAGERANK", "engine_sssp", "engine_wcc",
+    "PartitionPlan", "compile_plan", "compile_plan_cached",
+    "plan_cache_clear", "EdgeProgram", "Engine", "EngineResult",
+    "TRACE_COUNTER", "SSSP", "WCC", "PAGERANK", "engine_sssp", "engine_wcc",
     "engine_pagerank", "multi_source_sssp",
 ]

@@ -98,13 +98,28 @@ def segment_reduce(plan, messages: jax.Array, combine: str = "min",
 
     messages [K, Emax] (identity at masked slots) -> aggregates [K, Vmax]
     (identity at padding vertices).
+
+    Slack-aware bounds: the segmented scan covers only the sorted CSR prefix
+    ``[0, csr_fill)`` of each lane; half-edges appended by the streaming
+    patch path live in ``[csr_fill, e_max)`` in arbitrary order, so their
+    contribution is combined by a masked scatter on top of the scanned
+    aggregate.  Masked (deleted/padding) slots are pinned to the combine
+    identity in both regions and are therefore inert for min and add alike.
     """
     ident = _IDENTITY[combine]
-    msgs = jnp.where(plan.emask, messages, ident)
+    slot = jnp.arange(plan.emask.shape[1], dtype=jnp.int32)[None, :]
+    in_csr = slot < plan.csr_fill[:, None]                          # [K, Emax]
+    msgs = jnp.where(plan.emask & in_csr, messages, ident)
     scanned = segment_scan(plan.seg_start.T, msgs.T, combine=combine,
                            block_s=block_s, interpret=interpret).T  # [K, Emax]
-    rows = jnp.arange(plan.k, dtype=jnp.int32)[:, None]
+    rows = jnp.arange(plan.emask.shape[0], dtype=jnp.int32)[:, None]
     agg = scanned[rows, plan.last_slot]                             # [K, Vmax]
+    # append-region contributions (each appended half-edge is one segment)
+    slack = jnp.where(plan.emask & ~in_csr, messages, ident)
+    if combine == "min":
+        agg = agg.at[rows, plan.edge_tgt].min(slack)
+    else:  # add identity is 0.0, so the masked scatter is exact
+        agg = agg.at[rows, plan.edge_tgt].add(slack)
     return jnp.where(plan.vmask, agg, ident)
 
 

@@ -27,10 +27,23 @@ All arrays are padded to static lane-aligned shapes so every superstep jits
 and shard_maps: ``v_max`` / ``e_max`` are the max over partitions, rounded
 up to 128, with at least one guaranteed padding slot in the edge stream
 (the segment-scan parks degree-0 / padding vertices there).
+
+Streaming support (repro.stream): plans can be compiled with reserved
+*slack* — extra CSR edge slots and local-vertex slots per partition.
+``csr_fill`` / ``v_fill`` mark the boundary between the sorted CSR prefix
+and the append region; ``patch.py`` appends half-edges for inserted edges
+into the slack, clears ``emask`` bits for deletions, and rewrites the
+replica masks in place.  Everything that changes under a patch is a pytree
+*child* (dynamic), so a patched plan has the identical treedef and avals —
+jitted supersteps hit their existing compilation cache.  The static aux
+carries ``epoch``: only a compaction (full recompile) bumps it, making the
+epoch the cache key for anything derived from static plan structure.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 
 import numpy as np
 
@@ -45,19 +58,21 @@ from ..core.graph import Graph
 class PartitionPlan:
     """Per-partition compacted CSR blocks + replica exchange plan."""
 
-    # static
+    # static (pytree aux — stable across in-place patches)
     k: int                   # number of partitions
     n_vertices: int          # global |V|
     v_max: int               # padded local-vertex capacity
     e_max: int               # padded directed-half-edge capacity (>= 1 pad slot)
-    exchange_volume: int     # Σ|F_i| — replica slots crossing the cut/superstep
-    sum_local_vertices: int  # Σ|V_i|
+    epoch: int               # compaction epoch; bumps only on full recompile
 
     # local vertex space
     local2global: jax.Array  # [K, Vmax] int32 — global id per local slot (pad: 0)
     vmask: jax.Array         # [K, Vmax] bool  — slot holds a real vertex
-    # CSR half-edge stream, sorted by target local id
-    edge_tgt: jax.Array      # [K, Emax] int32 — target local id (nondecreasing)
+    # CSR half-edge stream, sorted by target local id in [0, csr_fill);
+    # [csr_fill, e_max) is the append/slack region (each appended half-edge
+    # is its own segment — the kernels combine it by masked scatter)
+    edge_tgt: jax.Array      # [K, Emax] int32 — target local id (nondecreasing
+                             #   within the CSR prefix)
     edge_nbr: jax.Array      # [K, Emax] int32 — neighbour local id
     emask: jax.Array         # [K, Emax] bool  — real half-edge
     seg_start: jax.Array     # [K, Emax] bool  — first half-edge of its target
@@ -68,22 +83,46 @@ class PartitionPlan:
     is_master: jax.Array     # [K, Vmax] bool — this partition owns the vertex
     n_local: jax.Array       # [K] int32 — real local vertices per partition
     n_edges_local: jax.Array # [K] int32 — real owned (undirected) edges
+    n_replicated: jax.Array  # [K] int32 — replicated slots per partition
+    csr_fill: jax.Array      # [K] int32 — first slot of the append region
+    v_fill: jax.Array        # [K] int32 — next free local-vertex slot
 
     def tree_flatten(self):
         children = (self.local2global, self.vmask, self.edge_tgt,
                     self.edge_nbr, self.emask, self.seg_start, self.last_slot,
                     self.replicated, self.is_master, self.n_local,
-                    self.n_edges_local)
+                    self.n_edges_local, self.n_replicated, self.csr_fill,
+                    self.v_fill)
         return children, (self.k, self.n_vertices, self.v_max, self.e_max,
-                          self.exchange_volume, self.sum_local_vertices)
+                          self.epoch)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*aux, *children)
 
-    # -- replica-exchange accounting (compile-time constants) ---------------
-    def exchange_per_superstep(self) -> int:
+    # -- replica-exchange accounting ----------------------------------------
+    # These are *dynamic* (children-derived) so streaming patches can change
+    # them without invalidating jit caches keyed on the plan treedef.  The
+    # host sums are memoized per instance so the serving path (Engine.run
+    # reads exchange_volume every query) never repeats the device sync.
+    @property
+    def exchange_volume(self) -> int:
         """Vertex states crossing the cut per superstep: Σ|F_i| (MESSAGES)."""
+        cached = self.__dict__.get("_exchange_volume")
+        if cached is None:
+            cached = int(jnp.sum(self.n_replicated))
+            object.__setattr__(self, "_exchange_volume", cached)
+        return cached
+
+    @property
+    def sum_local_vertices(self) -> int:
+        cached = self.__dict__.get("_sum_local_vertices")
+        if cached is None:
+            cached = int(jnp.sum(self.n_local))
+            object.__setattr__(self, "_sum_local_vertices", cached)
+        return cached
+
+    def exchange_per_superstep(self) -> int:
         return self.exchange_volume
 
     def replication_factor(self) -> float:
@@ -112,8 +151,29 @@ def _align(x: int, to: int = 128) -> int:
     return max(to, -(-x // to) * to)
 
 
-def compile_plan(g: Graph, owner, k: int) -> PartitionPlan:
-    """Host-side compilation (numpy): bucket, compact, CSR-sort, pad."""
+def replica_masks(l2g: np.ndarray, vmask: np.ndarray, n_vertices: int,
+                  k: int) -> tuple[np.ndarray, np.ndarray]:
+    """(replicated, is_master) recomputed from scratch — shared by
+    compile_plan and the streaming patch path."""
+    copies = np.zeros(n_vertices, np.int32)
+    master_of = np.full(n_vertices, -1, np.int32)
+    for i in reversed(range(k)):                # lowest partition id wins
+        present = l2g[i, vmask[i]]
+        master_of[present] = i
+    for i in range(k):
+        copies[l2g[i, vmask[i]]] += 1
+    replicated = vmask & (copies[l2g] >= 2)
+    is_master = vmask & (master_of[l2g] == np.arange(k)[:, None])
+    return replicated, is_master
+
+
+def compile_plan(g: Graph, owner, k: int, *, edge_slack: int = 0,
+                 vertex_slack: int = 0, epoch: int = 0) -> PartitionPlan:
+    """Host-side compilation (numpy): bucket, compact, CSR-sort, pad.
+
+    ``edge_slack`` / ``vertex_slack`` reserve per-partition capacity (in
+    undirected edges / local vertices) for the streaming patch path.
+    """
     owner = np.asarray(owner)
     u = np.asarray(g.src)
     v = np.asarray(g.dst)
@@ -129,9 +189,9 @@ def compile_plan(g: Graph, owner, k: int) -> PartitionPlan:
         locals_.append(np.unique(np.concatenate([u[sel], v[sel]])))
     n_local = np.array([len(x) for x in locals_], np.int32)
     e_cnt = np.array([int((owner == i).sum()) for i in range(k)], np.int32)
-    v_max = _align(int(n_local.max(initial=1)))
+    v_max = _align(int(n_local.max(initial=1)) + int(vertex_slack))
     # 2 half-edges per owned edge; +1 guarantees a padding slot for last_slot
-    e_max = _align(int(2 * e_cnt.max(initial=1)) + 1)
+    e_max = _align(int(2 * e_cnt.max(initial=1)) + 1 + 2 * int(edge_slack))
 
     l2g = np.zeros((k, v_max), np.int32)
     vmask = np.zeros((k, v_max), bool)
@@ -171,24 +231,58 @@ def compile_plan(g: Graph, owner, k: int) -> PartitionPlan:
             seg_start[i, ne] = True
 
     # replica exchange plan ------------------------------------------------
-    copies = np.zeros(g.n_vertices, np.int32)
-    for i in range(k):
-        copies[locals_[i]] += 1
-    master_of = np.full(g.n_vertices, -1, np.int32)
-    for i in reversed(range(k)):                # lowest partition id wins
-        master_of[locals_[i]] = i
-    replicated = vmask & (copies[l2g] >= 2)
-    is_master = vmask & (master_of[l2g] == np.arange(k)[:, None])
+    replicated, is_master = replica_masks(l2g, vmask, g.n_vertices, k)
 
     return PartitionPlan(
         k=int(k), n_vertices=int(g.n_vertices), v_max=int(v_max),
-        e_max=int(e_max),
-        exchange_volume=int(replicated.sum()),
-        sum_local_vertices=int(vmask.sum()),
+        e_max=int(e_max), epoch=int(epoch),
         local2global=jnp.asarray(l2g), vmask=jnp.asarray(vmask),
         edge_tgt=jnp.asarray(tgt), edge_nbr=jnp.asarray(nbr),
         emask=jnp.asarray(emask_p), seg_start=jnp.asarray(seg_start),
         last_slot=jnp.asarray(last_slot),
         replicated=jnp.asarray(replicated), is_master=jnp.asarray(is_master),
         n_local=jnp.asarray(n_local), n_edges_local=jnp.asarray(e_cnt),
+        n_replicated=jnp.asarray(replicated.sum(1).astype(np.int32)),
+        csr_fill=jnp.asarray(2 * e_cnt),
+        v_fill=jnp.asarray(n_local),
     )
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed plan cache: keyed by Graph.fingerprint() + assignment
+# digest, NOT object identity — logically equal (graph, owner, k) triples
+# share one compiled plan even across Graph/owner array rebuilds.
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_PLAN_CACHE_MAX = 32    # LRU bound: plans are multi-MB of device arrays
+
+
+def _owner_digest(g: Graph, owner) -> str:
+    """Digest of the assignment in canonical (sorted-edge-key) order, so the
+    key is invariant under slot permutation, like Graph.fingerprint()."""
+    u, v = g.as_numpy()
+    own = np.asarray(owner)[np.asarray(g.edge_mask)].astype(np.int32)
+    order = np.argsort(u.astype(np.int64) * g.n_vertices + v)
+    return hashlib.sha256(own[order].tobytes()).hexdigest()
+
+
+def compile_plan_cached(g: Graph, owner, k: int, *, edge_slack: int = 0,
+                        vertex_slack: int = 0, epoch: int = 0) -> PartitionPlan:
+    """Memoized compile_plan, keyed by graph/assignment *content*."""
+    key = (g.fingerprint(), _owner_digest(g, owner), int(k),
+           int(edge_slack), int(vertex_slack), int(epoch))
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        plan = compile_plan(g, owner, k, edge_slack=edge_slack,
+                            vertex_slack=vertex_slack, epoch=epoch)
+        _PLAN_CACHE[key] = plan
+        while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+            _PLAN_CACHE.popitem(last=False)
+    else:
+        _PLAN_CACHE.move_to_end(key)
+    return plan
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()

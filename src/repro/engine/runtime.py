@@ -46,6 +46,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from . import kernels
 from .plan import PartitionPlan
 
+# Trace accounting: _run_loop's Python body executes only while jax traces
+# (i.e. on a jit-cache miss), so this counter counts compilations, not calls.
+# The streaming tests assert it stays flat across plan patches — patched
+# plans keep the same treedef/avals and must reuse the warm cache; only a
+# compaction epoch (new static aux) is allowed to retrace.
+TRACE_COUNTER = {"run_loop": 0}
+
 
 class EdgeProgram(NamedTuple):
     """A "think-like-an-edge" program. All callables are pure and module
@@ -160,6 +167,7 @@ def _run_loop(plan: PartitionPlan, prog: EdgeProgram, kw: dict,
               axis: str | None, max_supersteps: int, max_local_iters: int,
               use_pallas: bool, interpret: bool):
     """The superstep loop (runs as-is on one device or inside shard_map)."""
+    TRACE_COUNTER["run_loop"] += 1
     ctx = prog.prepare(plan, kw)
     state0 = prog.init(plan, ctx)
     opts = dict(use_pallas=use_pallas, interpret=interpret)
@@ -253,6 +261,13 @@ class Engine:
     axis: str = "parts"
     use_pallas: bool = True
     interpret: bool = True
+
+    def with_plan(self, plan: PartitionPlan) -> "Engine":
+        """Rebind to a (patched or recompiled) plan. A patched plan shares
+        the old plan's treedef and avals, so jitted superstep loops keep
+        their compilation cache across the swap; only a plan with a bumped
+        compaction ``epoch`` retraces."""
+        return dataclasses.replace(self, plan=plan)
 
     def run(self, prog: EdgeProgram, max_supersteps: int | None = None,
             max_local_iters: int = 100_000, **kw: Any) -> EngineResult:

@@ -1,0 +1,19 @@
+"""repro.stream — streaming graph subsystem: incremental DFEP maintenance
+and engine plan patching for a live (mutating) edge set.
+
+Pipeline: StreamingGraph chunked ingest → online HDRF assignment seeded
+from DFEP owner state → in-place PartitionPlan patching (jit caches stay
+warm) → drift-triggered bounded local re-auction (DFEP steps 1–2 on the
+h-hop region).  See src/repro/stream/README.md for the design note.
+"""
+from .assign import hdrf_assign, seed_state
+from .ingest import ApplyResult, StreamingGraph, iter_chunks
+from .patch import EdgeChange, SlackExhausted, patch_plan
+from .reauction import h_hop_vertices, local_reauction
+from .session import StreamConfig, StreamSession
+
+__all__ = [
+    "ApplyResult", "EdgeChange", "SlackExhausted", "StreamConfig",
+    "StreamSession", "StreamingGraph", "h_hop_vertices", "hdrf_assign",
+    "iter_chunks", "local_reauction", "patch_plan", "seed_state",
+]

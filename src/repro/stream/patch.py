@@ -1,0 +1,190 @@
+"""Incremental ``PartitionPlan`` patching — the piece that keeps jit caches
+warm across graph updates.
+
+A compiled plan is a set of static-shape arrays; recompiling it on every
+update batch would both redo the O(|E|) host compaction *and* hand jax a new
+pytree, and the first query after each batch would pay a retrace.  Instead,
+``patch_plan`` edits the plan arrays in place (numpy, then re-wrapped):
+
+  * **deletion** — the edge's two half-edge slots have their ``emask`` bit
+    cleared.  Masked slots are pinned to the combine identity inside
+    ``segment_reduce`` (both the Pallas segmented-scan path and the scatter
+    reference), so a cleared slot is inert for min and add alike — the CSR
+    prefix keeps its sorted order with holes;
+  * **insertion** — two half-edges are appended into the partition's slack
+    region ``[csr_fill, e_max-1)``.  Appended slots are each their own
+    segment (order-free), combined by masked scatter on top of the scanned
+    prefix; freed slack slots are reused, freed *prefix* slots are not
+    (reuse there would corrupt the sorted-run invariant);
+  * **vertex arrival/departure** — arriving vertices claim a cleared or
+    virgin ``vmask`` slot (its ``last_slot`` is pointed at the identity pad
+    slot — the vertex's edges live only in slack); vertices whose last local
+    edge disappeared have their ``vmask`` bit cleared;
+  * the replica-exchange masks (``replicated`` / ``is_master``) and the
+    per-partition counts are recomputed exactly — these are pytree
+    *children*, so changing them does not retrace anything.
+
+The patched plan has the identical treedef + avals as its parent (``epoch``
+unchanged), so ``Engine`` superstep loops hit their existing compilation
+cache — asserted by the TRACE_COUNTER test.  When a partition's slack runs
+out, ``SlackExhausted`` tells the session to recompile (a compaction epoch).
+"""
+from __future__ import annotations
+
+from typing import Iterable, NamedTuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..engine.plan import PartitionPlan, replica_masks
+
+
+class SlackExhausted(RuntimeError):
+    """A partition ran out of reserved CSR or vertex slack — recompile."""
+
+
+class EdgeChange(NamedTuple):
+    """One edge-level ownership delta. ``old == -1``: pure insert;
+    ``new == -1``: pure delete; both >= 0: a re-auction move."""
+    u: int
+    v: int
+    old: int
+    new: int
+
+
+def patch_plan(plan: PartitionPlan, changes: Iterable[EdgeChange]
+               ) -> PartitionPlan:
+    """Apply edge inserts/deletes/moves to a plan without recompiling.
+
+    Raises SlackExhausted (leaving the input plan untouched) when any
+    partition lacks slack; the caller falls back to compile_plan with a
+    bumped epoch.
+    """
+    changes = [EdgeChange(*c) for c in changes]
+    if not changes:
+        return plan
+
+    k, v_cap, e_cap = plan.k, plan.v_max, plan.e_max
+    n_vertices = plan.n_vertices
+    l2g = np.array(plan.local2global)
+    vmask = np.array(plan.vmask)
+    tgt = np.array(plan.edge_tgt)
+    nbr = np.array(plan.edge_nbr)
+    em = np.array(plan.emask)
+    seg = np.array(plan.seg_start)
+    last_slot = np.array(plan.last_slot)
+    csr_fill = np.array(plan.csr_fill)
+    v_fill = np.array(plan.v_fill)
+
+    touched: set[int] = set()
+    g2l: dict[int, np.ndarray] = {}
+    edge_slots: dict[int, dict] = {}
+    free_edge: dict[int, list] = {}
+    free_vert: dict[int, list] = {}
+
+    def _g2l(p: int) -> np.ndarray:
+        if p not in g2l:
+            a = np.full(n_vertices, -1, np.int64)
+            used = np.flatnonzero(vmask[p])
+            a[l2g[p, used]] = used
+            g2l[p] = a
+        return g2l[p]
+
+    def _edge_slots(p: int) -> dict:
+        if p not in edge_slots:
+            d: dict = {}
+            for s in np.flatnonzero(em[p]).tolist():
+                a = int(l2g[p, tgt[p, s]])
+                b = int(l2g[p, nbr[p, s]])
+                d.setdefault((min(a, b), max(a, b)), []).append(s)
+            edge_slots[p] = d
+        return edge_slots[p]
+
+    def _free_edge_slots(p: int) -> list:
+        if p not in free_edge:
+            # slack region only, excluding the guaranteed identity pad slot
+            sl = np.flatnonzero(~em[p, csr_fill[p]:e_cap - 1]) + csr_fill[p]
+            free_edge[p] = sl.tolist()[::-1]
+        return free_edge[p]
+
+    def _free_vert_slots(p: int) -> list:
+        if p not in free_vert:
+            free_vert[p] = np.flatnonzero(~vmask[p]).tolist()[::-1]
+        return free_vert[p]
+
+    # deletes first so a move's freed slack can be reused by later inserts
+    for c in changes:
+        if c.old < 0:
+            continue
+        p = c.old
+        key = (min(c.u, c.v), max(c.u, c.v))   # global ids, like _edge_slots
+        slots = _edge_slots(p).pop(key, None)
+        if slots is None:
+            raise KeyError(f"edge {key} not present in partition {p}")
+        for s in slots:
+            em[p, s] = False
+        # freed slack slots become reusable: the free lists are built lazily
+        # in the insert pass below, from the post-delete emask (deletes all
+        # precede inserts, so no slot is ever listed twice)
+        touched.add(p)  # presence is finalised by the degree sweep below
+
+    for c in changes:
+        if c.new < 0:
+            continue
+        p = c.new
+        gl = _g2l(p)
+
+        def ensure_vertex(x: int) -> int:
+            if gl[x] >= 0:
+                return int(gl[x])
+            fv = _free_vert_slots(p)
+            if not fv:
+                raise SlackExhausted(f"partition {p}: no vertex slack")
+            s = fv.pop()
+            l2g[p, s] = x
+            vmask[p, s] = True
+            last_slot[p, s] = e_cap - 1   # edges live in slack; base agg
+            gl[x] = s                     # is the identity pad slot
+            v_fill[p] = max(v_fill[p], s + 1)
+            return s
+
+        fe = _free_edge_slots(p)
+        if len(fe) < 2:
+            raise SlackExhausted(f"partition {p}: no CSR slack")
+        lu = ensure_vertex(int(c.u))
+        lv = ensure_vertex(int(c.v))
+        s0, s1 = fe.pop(), fe.pop()
+        for s, t_, n_ in ((s0, lu, lv), (s1, lv, lu)):
+            tgt[p, s] = t_
+            nbr[p, s] = n_
+            em[p, s] = True
+            seg[p, s] = True              # every appended slot: own segment
+        _edge_slots(p).setdefault((min(c.u, c.v), max(c.u, c.v)),
+                                  []).extend([s0, s1])
+        touched.add(p)
+
+    # finalise touched partitions: vertex departures + exact counts
+    n_local = np.array(plan.n_local)
+    n_edges_local = np.array(plan.n_edges_local)
+    for p in touched:
+        deg = np.zeros(v_cap, np.int64)
+        np.add.at(deg, tgt[p, em[p]], 1)
+        vmask[p] &= deg > 0
+        n_local[p] = int(vmask[p].sum())
+        n_edges_local[p] = int(em[p].sum()) // 2
+
+    replicated, is_master = replica_masks(l2g, vmask, n_vertices, k)
+
+    return PartitionPlan(
+        k=k, n_vertices=n_vertices, v_max=v_cap, e_max=e_cap,
+        epoch=plan.epoch,
+        local2global=jnp.asarray(l2g), vmask=jnp.asarray(vmask),
+        edge_tgt=jnp.asarray(tgt), edge_nbr=jnp.asarray(nbr),
+        emask=jnp.asarray(em), seg_start=jnp.asarray(seg),
+        last_slot=jnp.asarray(last_slot),
+        replicated=jnp.asarray(replicated), is_master=jnp.asarray(is_master),
+        n_local=jnp.asarray(n_local), n_edges_local=jnp.asarray(n_edges_local),
+        n_replicated=jnp.asarray(replicated.sum(1).astype(np.int32)),
+        csr_fill=jnp.asarray(csr_fill), v_fill=jnp.asarray(v_fill),
+    )

@@ -1,0 +1,199 @@
+"""StreamSession — the streaming subsystem's front door.
+
+Owns the full pipeline state: a ``StreamingGraph`` (chunked slot-level
+ingest), the slot-parallel DFEP ``owner`` array, the slack-compiled
+``PartitionPlan``, and the ``Engine`` bound to it.  One ``apply()`` call
+takes a batch of insertions + deletions and leaves the session queryable
+again:
+
+  1. updates are ingested chunk by chunk (``chunk_size`` fixed);
+  2. arriving edges are placed online by the HDRF rule seeded from the
+     current owner state (assign.py);
+  3. the plan is *patched* in place (patch.py) — jit caches stay warm;
+  4. if the replication factor has drifted past ``drift_threshold`` above
+     its post-correction baseline, a bounded local re-auction
+     (reauction.py) re-sells the h-hop region around touched vertices and
+     the resulting moves are patched in too;
+  5. only two events recompile: a partition exhausting its reserved slack,
+     or the graph itself running out of spare padded slots (a compaction
+     epoch — ``epoch`` bumps and the next query retraces once).
+
+Engine results over the session plan stay exactly consistent with the
+whole-graph oracles on ``session.graph()`` (tests/test_stream.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import dfep
+from ..engine.plan import compile_plan
+from ..engine.runtime import Engine
+from . import assign, reauction
+from .ingest import StreamingGraph, iter_chunks
+from .patch import EdgeChange, SlackExhausted, patch_plan
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    k: int
+    chunk_size: int = 256
+    edge_slack: int | None = None     # per-partition undirected-edge slack
+    vertex_slack: int | None = None   # per-partition local-vertex slack
+    drift_threshold: float = 0.10     # RF drift triggering local re-auction
+    hops: int = 2                     # re-auction region radius
+    reauction_max_rounds: int = 400
+    compaction_headroom: float = 0.5
+    hdrf_lambda: float = 1.1
+
+
+class StreamSession:
+    """Live-graph serving session: ingest updates, keep the partition and
+    the compiled plan maintained, answer engine queries in between."""
+
+    def __init__(self, g, cfg: StreamConfig, key: int = 0,
+                 owner: np.ndarray | None = None):
+        self.cfg = cfg
+        self.k = cfg.k
+        self.sg = StreamingGraph(g, chunk_size=cfg.chunk_size)
+        if owner is None:
+            owner, _ = dfep.partition(g, k=cfg.k, key=key)
+        self.owner = np.asarray(owner).copy()          # [e_pad], -2 at pads
+        self.touched = np.zeros(g.n_vertices, bool)
+        self.epoch = 0
+        self.n_ingested = 0
+        self.n_patches = 0
+        self.n_recompiles = 0
+        self.n_reauctions = 0
+        self._compile()
+        self.rf_base = self.plan.replication_factor()
+
+    # -- plan lifecycle -----------------------------------------------------
+    def _slack(self) -> tuple[int, int]:
+        """Default slack is sized from the update granularity (a few chunks
+        per partition) with a small |E|-proportional floor — enough for
+        several patch batches between compactions without inflating the
+        per-superstep scan over [K, e_max] at steady state."""
+        e = max(self.sg.n_edges, 1)
+        edge_slack = self.cfg.edge_slack
+        if edge_slack is None:
+            edge_slack = max(2 * self.cfg.chunk_size, e // (4 * self.k))
+        vertex_slack = self.cfg.vertex_slack
+        if vertex_slack is None:
+            vertex_slack = max(self.cfg.chunk_size,
+                               self.sg.n_vertices // (2 * self.k))
+        return int(edge_slack), int(vertex_slack)
+
+    def _compile(self) -> None:
+        g = self.sg.graph()
+        edge_slack, vertex_slack = self._slack()
+        self.plan = compile_plan(g, self.owner, self.k,
+                                 edge_slack=edge_slack,
+                                 vertex_slack=vertex_slack, epoch=self.epoch)
+        self.engine = Engine(self.plan)
+
+    def _recompile(self) -> None:
+        """Compaction epoch: full plan rebuild; the next query retraces."""
+        self.epoch += 1
+        self.n_recompiles += 1
+        self._compile()
+
+    def _patch(self, changes: list[EdgeChange]) -> None:
+        if not changes:
+            return
+        try:
+            self.plan = patch_plan(self.plan, changes)
+            self.engine = self.engine.with_plan(self.plan)
+            self.n_patches += 1
+        except SlackExhausted:
+            self._recompile()
+
+    # -- update ingestion ---------------------------------------------------
+    def apply(self, inserts=None, deletes=None) -> dict:
+        """Ingest a batch of edge updates; returns maintenance stats."""
+        cfg = self.cfg
+        inserts = np.zeros((0, 2), np.int64) if inserts is None else inserts
+        deletes = np.zeros((0, 2), np.int64) if deletes is None else deletes
+        changes: list[EdgeChange] = []
+
+        u_live, v_live = self.sg.graph().as_numpy()
+        own_live = self.owner[np.asarray(self.sg.graph().edge_mask)]
+        presence, sizes, degrees = assign.seed_state(
+            u_live, v_live, own_live, self.sg.n_vertices, self.k)
+
+        for chunk in iter_chunks(deletes, cfg.chunk_size):
+            res = self.sg.delete_chunk(chunk)
+            for s, a, b in zip(res.slots.tolist(), res.u.tolist(),
+                               res.v.tolist()):
+                changes.append(EdgeChange(a, b, int(self.owner[s]), -1))
+                self.owner[s] = -2
+                self.touched[a] = self.touched[b] = True
+            self.n_ingested += len(res.slots)
+
+        for chunk in iter_chunks(inserts, cfg.chunk_size):
+            if self.sg.free_slots() < len(chunk):
+                # graph out of spare slots: compaction epoch (owner remaps
+                # by the slot gather compact() returns, plan rebuilds)
+                self._flush_via_compaction(changes)
+                changes = []
+            res = self.sg.insert_chunk(chunk)
+            owners = assign.hdrf_assign(res.u, res.v, presence, sizes,
+                                        degrees, lam=cfg.hdrf_lambda)
+            for s, a, b, p in zip(res.slots.tolist(), res.u.tolist(),
+                                  res.v.tolist(), owners.tolist()):
+                self.owner[s] = p
+                changes.append(EdgeChange(a, b, -1, int(p)))
+                self.touched[a] = self.touched[b] = True
+            self.n_ingested += len(res.slots)
+
+        self._patch(changes)
+
+        reauction_info = self._reauction() if self._drifted() else None
+        return {"epoch": self.epoch, "patches": self.n_patches,
+                "recompiles": self.n_recompiles,
+                "reauctions": self.n_reauctions,
+                "rf": self.plan.replication_factor(),
+                "rf_base": self.rf_base, "reauction": reauction_info}
+
+    def _flush_via_compaction(self, pending: list[EdgeChange]) -> None:
+        """Compact the graph's slot space; pending patch changes are
+        absorbed by the recompile (owner already reflects them)."""
+        del pending
+        keep = self.sg.compact(headroom_frac=self.cfg.compaction_headroom)
+        owner = np.full(self.sg.e_pad, -2, np.int32)
+        owner[:len(keep)] = self.owner[keep]
+        self.owner = owner
+        self._recompile()
+
+    # -- drift-triggered local re-auction -----------------------------------
+    def _drifted(self) -> bool:
+        rf_now = self.plan.replication_factor()
+        return (bool(self.touched.any())
+                and rf_now > (1.0 + self.cfg.drift_threshold) * self.rf_base)
+
+    def _reauction(self) -> dict:
+        g = self.sg.graph()
+        new_owner, info = reauction.local_reauction(
+            g, self.owner, self.touched, self.k, hops=self.cfg.hops,
+            max_rounds=self.cfg.reauction_max_rounds)
+        mask = np.asarray(g.edge_mask)
+        moved = np.flatnonzero((new_owner != self.owner) & mask)
+        u = np.asarray(g.src)
+        v = np.asarray(g.dst)
+        changes = [EdgeChange(int(u[s]), int(v[s]), int(self.owner[s]),
+                              int(new_owner[s])) for s in moved]
+        self.owner = new_owner
+        self._patch(changes)
+        self.n_reauctions += 1
+        self.touched[:] = False
+        # re-baseline: drift is measured against the last correction point
+        self.rf_base = self.plan.replication_factor()
+        return info
+
+    # -- queries ------------------------------------------------------------
+    def graph(self):
+        return self.sg.graph()
+
+    def replication_factor(self) -> float:
+        return self.plan.replication_factor()
