@@ -14,7 +14,7 @@ import subprocess
 import sys
 import textwrap
 
-from .common import SCALE, emit
+from .common import SCALE, emit, emit_json
 
 WORKER = textwrap.dedent("""
     import os, sys, time, json
@@ -58,7 +58,10 @@ def run(devs=(1, 2, 4, 8), scale=SCALE) -> list[dict]:
 
 
 def main() -> None:
-    emit("fig8_scalability", run())
+    rows = run()
+    emit("fig8_scalability", rows)
+    # persist the structured record like fig10/stream/serve do
+    emit_json("BENCH_scalability", {"scale": SCALE, "rows": rows})
 
 
 if __name__ == "__main__":

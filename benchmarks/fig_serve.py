@@ -1,0 +1,149 @@
+"""Serving subsystem benchmark: micro-batched vs sequential query serving.
+
+Offers a fixed burst of multi-tenant SSSP queries (SSSP only: it is the
+batchable kind, so it isolates the micro-batching effect; the shared-run
+WCC/PageRank path is covered by tests/test_gserve.py) to:
+
+  * a *sequential* baseline — one synchronous ``Engine.run`` per query, the
+    pre-gserve serving story;
+  * a ``GraphServer`` with single-bucket configurations of increasing size
+    — isolating the micro-batching win (one vmapped superstep loop answers
+    the whole bucket; latency ~ the slowest query in the bucket instead of
+    the sum).
+
+Each point reports queries/sec and p50/p99 end-to-end latency, warm (the
+first pass per bucket shape pays the jit trace and is measured separately
+as ``warmup_s``).  A second sweep repeats the bucket=max point with
+concurrent ``repro.stream`` update batches interleaved between micro-batch
+pumps — serving under mutation, with the double-buffered plan swap and
+epoch-keyed cache invalidation on the hot path.
+
+Emits ``BENCH_serve.json``.  Acceptance (ISSUE 3): batched qps at
+bucket >= 8 beats the sequential baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import dfep, graph
+from repro import engine as E
+from repro import gserve as G
+from repro import stream as S
+
+from .common import SCALE, emit_json
+
+
+def _queries(rng, n_v: int, n: int) -> list:
+    return [G.QueryRequest("sssp", tenant=f"t{i % 8}",
+                           source=int(rng.integers(0, n_v)))
+            for i in range(n)]
+
+
+def _sequential(eng, reqs) -> dict:
+    # same XLA segment-reduce path the server uses, for a fair comparison
+    lat = []
+    t_all = time.time()
+    for r in reqs:
+        t0 = time.time()
+        E.engine_sssp(eng, r.source).state.block_until_ready()
+        lat.append(time.time() - t0)
+    wall = time.time() - t_all
+    return {"mode": "sequential", "bucket": 1, "n_queries": len(reqs),
+            "qps": round(len(reqs) / wall, 2),
+            "p50_s": round(G.percentile(lat, 50), 4),
+            "p99_s": round(G.percentile(lat, 99), 4)}
+
+
+def _batched(plan, g, reqs, bucket: int, *, session=None,
+             update_batches=0, rng=None) -> dict:
+    if session is None:
+        srv = G.GraphServer(E.Engine(plan), g, buckets=(bucket,),
+                            cache_entries=0)      # no result-cache assist
+    else:
+        srv = G.GraphServer.from_session(session, buckets=(bucket,),
+                                         cache_entries=0)
+    # warm the jit cache for this bucket shape once, outside the timing
+    t0 = time.time()
+    srv.serve(_queries(np.random.default_rng(99), g.n_vertices,
+                       min(bucket, len(reqs))))
+    warmup_s = time.time() - t0
+    srv.metrics.reset()
+
+    t_all = time.time()
+    for r in reqs:
+        srv.submit(r)
+    if update_batches and session is not None:
+        # serving under mutation: pump and mutate in alternation
+        for _ in range(update_batches):
+            srv.pump()
+            gu, gv = session.graph().as_numpy()
+            kill = rng.choice(len(gu), size=8, replace=False)
+            session.apply(
+                inserts=rng.integers(0, g.n_vertices, size=(12, 2)),
+                deletes=np.stack([gu[kill], gv[kill]], 1))
+        srv.drain()
+    else:
+        srv.drain()
+    wall = time.time() - t_all
+    st = srv.stats()
+    srv.close()
+    return {"mode": "batched" if not update_batches else "batched+stream",
+            "bucket": bucket, "n_queries": len(reqs),
+            "qps": round(len(reqs) / wall, 2),
+            "p50_s": st["latency_p50_s"], "p99_s": st["latency_p99_s"],
+            "warmup_s": round(warmup_s, 3),
+            "batches": st["batches"],
+            "mean_batch_occupancy": st["mean_batch_occupancy"],
+            "pad_waste_frac": st["pad_waste_frac"],
+            "plan_buffer_swaps": st["plan_buffer_swaps"]}
+
+
+def run(dataset: str = "email-enron", scale: float = SCALE, k: int = 8,
+        n_queries: int = 48, buckets=(1, 4, 8, 16),
+        stream_update_batches: int = 4) -> dict:
+    g = graph.load_dataset(dataset, scale=scale, seed=0)
+    owner, _ = dfep.partition(g, k=k, key=0)
+    plan = E.compile_plan(g, np.asarray(owner), k)
+    rng = np.random.default_rng(0)
+    reqs = _queries(rng, g.n_vertices, n_queries)
+
+    # sequential baseline (warm first)
+    eng = E.Engine(plan, use_pallas=False)
+    E.engine_sssp(eng, 0).state.block_until_ready()
+    rows = [_sequential(eng, reqs)]
+
+    # micro-batched sweep over bucket sizes
+    for b in buckets:
+        rows.append(_batched(plan, g, reqs, b))
+
+    # serving under concurrent stream updates at the largest bucket
+    sess = S.StreamSession(g, S.StreamConfig(k=k, drift_threshold=1e9),
+                           key=0, owner=np.asarray(owner))
+    rows.append(_batched(plan, g, reqs, max(buckets), session=sess,
+                         update_batches=stream_update_batches,
+                         rng=np.random.default_rng(5)))
+
+    seq_qps = rows[0]["qps"]
+    by_bucket = {r["bucket"]: r["qps"] for r in rows if r["mode"] == "batched"}
+    big = max(b for b in by_bucket if b >= 8) if any(
+        b >= 8 for b in by_bucket) else max(by_bucket)
+    return {
+        "dataset": dataset, "scale": scale, "k": k,
+        "n_vertices": g.n_vertices, "n_edges": g.n_edges,
+        "n_queries": n_queries,
+        "rows": rows,
+        "sequential_qps": seq_qps,
+        "batched_qps_at_largest": by_bucket[big],
+        "speedup_batched_vs_sequential": round(by_bucket[big]
+                                               / max(seq_qps, 1e-9), 2),
+    }
+
+
+def main() -> None:
+    emit_json("BENCH_serve", run())
+
+
+if __name__ == "__main__":
+    main()

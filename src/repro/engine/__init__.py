@@ -4,14 +4,16 @@ Pipeline: partition (core/dfep.py, core/baselines.py) → compile_plan →
 Engine.run(program). See src/repro/engine/README.md for the design.
 """
 from .plan import (PartitionPlan, compile_plan, compile_plan_cached,
-                   plan_cache_clear)
-from .runtime import TRACE_COUNTER, EdgeProgram, Engine, EngineResult
+                   plan_cache_clear, plan_cache_stats)
+from .runtime import (TRACE_COUNTER, EdgeProgram, Engine, EngineResult,
+                      PendingResult)
 from .programs import (PAGERANK, SSSP, WCC, engine_pagerank, engine_sssp,
                        engine_wcc, multi_source_sssp)
 
 __all__ = [
     "PartitionPlan", "compile_plan", "compile_plan_cached",
-    "plan_cache_clear", "EdgeProgram", "Engine", "EngineResult",
-    "TRACE_COUNTER", "SSSP", "WCC", "PAGERANK", "engine_sssp", "engine_wcc",
-    "engine_pagerank", "multi_source_sssp",
+    "plan_cache_clear", "plan_cache_stats", "EdgeProgram", "Engine",
+    "EngineResult", "PendingResult", "TRACE_COUNTER", "SSSP", "WCC",
+    "PAGERANK", "engine_sssp", "engine_wcc", "engine_pagerank",
+    "multi_source_sssp",
 ]

@@ -256,6 +256,10 @@ def compile_plan(g: Graph, owner, k: int, *, edge_slack: int = 0,
 
 _PLAN_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 _PLAN_CACHE_MAX = 32    # LRU bound: plans are multi-MB of device arrays
+# Observability for the serving layer (gserve.metrics polls these): hits
+# mean a query re-used an already-compiled plan; a climbing eviction count
+# under steady load means the working set exceeds _PLAN_CACHE_MAX.
+_PLAN_CACHE_COUNTERS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def _owner_digest(g: Graph, owner) -> str:
@@ -274,15 +278,27 @@ def compile_plan_cached(g: Graph, owner, k: int, *, edge_slack: int = 0,
            int(edge_slack), int(vertex_slack), int(epoch))
     plan = _PLAN_CACHE.get(key)
     if plan is None:
+        _PLAN_CACHE_COUNTERS["misses"] += 1
         plan = compile_plan(g, owner, k, edge_slack=edge_slack,
                             vertex_slack=vertex_slack, epoch=epoch)
         _PLAN_CACHE[key] = plan
         while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
             _PLAN_CACHE.popitem(last=False)
+            _PLAN_CACHE_COUNTERS["evictions"] += 1
     else:
+        _PLAN_CACHE_COUNTERS["hits"] += 1
         _PLAN_CACHE.move_to_end(key)
     return plan
 
 
-def plan_cache_clear() -> None:
+def plan_cache_stats() -> dict:
+    """Snapshot of the plan cache's hit/miss/eviction counters + size."""
+    return dict(_PLAN_CACHE_COUNTERS, size=len(_PLAN_CACHE),
+                max_size=_PLAN_CACHE_MAX)
+
+
+def plan_cache_clear(reset_counters: bool = False) -> None:
     _PLAN_CACHE.clear()
+    if reset_counters:
+        for k in _PLAN_CACHE_COUNTERS:
+            _PLAN_CACHE_COUNTERS[k] = 0

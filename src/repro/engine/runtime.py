@@ -28,9 +28,12 @@ Two device mappings, same numerics:
     device-local, exactly like the paper's workers between
     synchronisations.
 
-Batched multi-source queries (the serving scenario) vmap the single-device
-path over the source axis — one compiled program answers S queries in one
-superstep loop.
+Batched multi-source queries (the serving scenario) vmap the superstep
+loop over the source axis — one compiled program answers S queries in one
+superstep loop, on one device or with the batch axis vmapped inside the
+shard_map body.  ``dispatch``/``dispatch_batched`` return a
+``PendingResult`` without syncing so a serving scheduler can overlap batch
+formation with device execution (``jax.block_until_ready`` on completion).
 """
 from __future__ import annotations
 
@@ -94,6 +97,29 @@ class EngineResult:
                 "converged": bool(jnp.all(self.converged)),
                 "exchange_per_superstep": self.exchange_per_superstep,
                 "total_exchanged": self.total_exchanged}
+
+
+@dataclasses.dataclass(frozen=True)
+class PendingResult:
+    """In-flight engine computation: the superstep loop has been dispatched
+    (XLA runs it asynchronously) but nothing host-side has synced on it.
+
+    ``result()`` blocks until the device arrays are ready and materialises
+    the ``EngineResult``; until then the caller is free to form and dispatch
+    further batches — the serving scheduler's overlap primitive."""
+    _arrays: tuple                  # (state, supersteps, local_iters, converged)
+    exchange_per_superstep: int
+
+    def block_until_ready(self) -> "PendingResult":
+        jax.block_until_ready(self._arrays)
+        return self
+
+    def result(self) -> EngineResult:
+        state, supersteps, local_iters, converged = \
+            jax.block_until_ready(self._arrays)
+        ex = self.exchange_per_superstep
+        return EngineResult(state, supersteps, local_iters, converged, ex,
+                            int(jnp.max(supersteps)) * ex)
 
 
 def _ident(combine: str) -> float:
@@ -248,6 +274,35 @@ def _run_sharded(plan, kw, *, prog, mesh, axis, k_local, max_supersteps,
     return fn(plan, kw)
 
 
+@partial(jax.jit, static_argnames=("prog", "mesh", "axis", "k_local",
+                                   "max_supersteps", "max_local_iters",
+                                   "interpret"))
+def _run_sharded_batched(plan, kw, batched_kw, *, prog, mesh, axis, k_local,
+                         max_supersteps, max_local_iters, interpret):
+    """Batched queries on the shard_map path: partitions stay sharded over
+    the mesh axis while the batch axis is vmapped *inside* the sharded body,
+    so one superstep loop answers the whole micro-batch with the same
+    collective schedule as the unbatched path (the XLA segment-reduce is
+    used — vmapping the Pallas grid is unsupported)."""
+    plan_spec = jax.tree_util.tree_map(lambda _: P(axis), plan)
+    kw_spec = jax.tree_util.tree_map(lambda _: P(), kw)
+    bkw_spec = jax.tree_util.tree_map(lambda _: P(), batched_kw)
+
+    def body(plan_local, kw_local, bkw_local):
+        plan_local = dataclasses.replace(plan_local, k=k_local)
+
+        def one(bkw):
+            return _run_loop(plan_local, prog, {**kw_local, **bkw}, axis,
+                             max_supersteps, max_local_iters,
+                             use_pallas=False, interpret=interpret)
+
+        return jax.vmap(one)(bkw_local)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(plan_spec, kw_spec, bkw_spec),
+                   out_specs=(P(), P(), P(), P()), check_rep=False)
+    return fn(plan, kw, batched_kw)
+
+
 @dataclasses.dataclass(frozen=True)
 class Engine:
     """Partitioned execution engine bound to a plan (and optionally a mesh).
@@ -269,52 +324,73 @@ class Engine:
         compaction ``epoch`` retraces."""
         return dataclasses.replace(self, plan=plan)
 
-    def run(self, prog: EdgeProgram, max_supersteps: int | None = None,
-            max_local_iters: int = 100_000, **kw: Any) -> EngineResult:
+    def dispatch(self, prog: EdgeProgram, max_supersteps: int | None = None,
+                 max_local_iters: int = 100_000, **kw: Any) -> PendingResult:
+        """Non-blocking single-query dispatch: hands the superstep loop to
+        XLA and returns immediately. ``.result()`` syncs."""
         steps = _steps(prog, max_supersteps)
         kw = {k: jnp.asarray(v) for k, v in kw.items()}
         if self.mesh is None:
             out = _run_single(self.plan, prog, kw, steps, max_local_iters,
                               self.use_pallas, self.interpret)
         else:
-            ndev = self.mesh.shape[self.axis]
-            assert self.plan.k % ndev == 0, \
-                f"k={self.plan.k} must be divisible by mesh axis size {ndev}"
             out = _run_sharded(self._sharded_plan(), kw, prog=prog,
                                mesh=self.mesh, axis=self.axis,
-                               k_local=self.plan.k // ndev,
+                               k_local=self._k_local(),
                                max_supersteps=steps,
                                max_local_iters=max_local_iters,
                                interpret=self.interpret)
-        state, supersteps, local_iters, converged = out
-        ex = self.plan.exchange_volume
-        return EngineResult(state, supersteps, local_iters, converged, ex,
-                            int(supersteps) * ex)
+        return PendingResult(out, self.plan.exchange_volume)
+
+    def run(self, prog: EdgeProgram, max_supersteps: int | None = None,
+            max_local_iters: int = 100_000, **kw: Any) -> EngineResult:
+        return self.dispatch(prog, max_supersteps, max_local_iters,
+                             **kw).result()
+
+    def dispatch_batched(self, prog: EdgeProgram, batched_kw: dict,
+                         max_supersteps: int | None = None,
+                         max_local_iters: int = 100_000,
+                         **kw: Any) -> PendingResult:
+        """Non-blocking micro-batch dispatch: vmap the superstep loop over a
+        batch axis of ``batched_kw`` (e.g. ``{"source": sources}`` for
+        multi-source SSSP). Runs on one device or, with a mesh bound, with
+        the batch axis vmapped inside the shard_map body. The XLA
+        segment-reduce path is used (vmapping the interpreted Pallas grid is
+        unsupported). The serving scheduler dispatches the next micro-batch
+        while this one computes and syncs via ``.result()``."""
+        steps = _steps(prog, max_supersteps)
+        kw = {k: jnp.asarray(v) for k, v in kw.items()}
+        batched_kw = {k: jnp.asarray(v) for k, v in batched_kw.items()}
+        if self.mesh is None:
+            def one(bkw):
+                return _run_single(self.plan, prog, {**kw, **bkw}, steps,
+                                   max_local_iters, False, self.interpret)
+
+            out = jax.vmap(one)(batched_kw)
+        else:
+            out = _run_sharded_batched(self._sharded_plan(), kw, batched_kw,
+                                       prog=prog, mesh=self.mesh,
+                                       axis=self.axis,
+                                       k_local=self._k_local(),
+                                       max_supersteps=steps,
+                                       max_local_iters=max_local_iters,
+                                       interpret=self.interpret)
+        return PendingResult(out, self.plan.exchange_volume)
 
     def run_batched(self, prog: EdgeProgram, batched_kw: dict,
                     max_supersteps: int | None = None,
                     max_local_iters: int = 100_000,
                     **kw: Any) -> EngineResult:
-        """vmap the superstep loop over a batch axis of ``batched_kw``
-        (e.g. ``{"source": sources}`` for multi-source SSSP). Single-device
-        path; the XLA segment-reduce is used (vmapping the interpreted
-        Pallas grid is unsupported)."""
-        assert self.mesh is None, \
-            "run_batched is single-device; use an Engine without a mesh"
-        steps = _steps(prog, max_supersteps)
-        kw = {k: jnp.asarray(v) for k, v in kw.items()}
-        batched_kw = {k: jnp.asarray(v) for k, v in batched_kw.items()}
-
-        def one(bkw):
-            return _run_single(self.plan, prog, {**kw, **bkw}, steps,
-                               max_local_iters, False, self.interpret)
-
-        state, supersteps, local_iters, converged = jax.vmap(one)(batched_kw)
-        ex = self.plan.exchange_volume
-        return EngineResult(state, supersteps, local_iters, converged, ex,
-                            int(jnp.max(supersteps)) * ex)
+        return self.dispatch_batched(prog, batched_kw, max_supersteps,
+                                     max_local_iters, **kw).result()
 
     # -- shard_map plumbing -------------------------------------------------
+    def _k_local(self) -> int:
+        ndev = self.mesh.shape[self.axis]
+        assert self.plan.k % ndev == 0, \
+            f"k={self.plan.k} must be divisible by mesh axis size {ndev}"
+        return self.plan.k // ndev
+
     def _sharded_plan(self) -> PartitionPlan:
         """Plan with leaves placed along the mesh axis, transferred once per
         Engine and reused across queries (stashed on the instance; frozen

@@ -1,0 +1,83 @@
+"""Serving metrics: latency percentiles, throughput, batching efficiency.
+
+One ``ServeMetrics`` per ``GraphServer``.  Each completed request records
+its end-to-end latency (submit -> result materialised on host), the
+micro-batch it rode in, and whether the epoch-keyed result cache answered
+it.  ``snapshot()`` folds in the engine plan cache's hit/miss/eviction
+counters (engine.plan.plan_cache_stats) so one record shows the whole
+caching hierarchy: result cache (per query) -> plan cache (per graph
+content) -> jit cache (per bucket shape, tracked by runtime.TRACE_COUNTER).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..engine.plan import plan_cache_stats
+
+
+def percentile(xs: list[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+class ServeMetrics:
+    def __init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        self.latencies: list[float] = []
+        self.n_completed = 0
+        self.n_rejected = 0
+        self.n_cache_hits = 0
+        self.n_batches = 0
+        self.n_lanes_dispatched = 0    # padded lanes (bucket sizes summed)
+        self.n_lanes_used = 0          # deduped real parameters
+        self.n_requests_batched = 0    # requests answered by engine runs
+        self.n_swaps = 0               # plan-buffer swaps observed
+        self.t0 = time.time()
+
+    # -- recording (called by the server) -----------------------------------
+    def record_result(self, latency_s: float, from_cache: bool) -> None:
+        self.latencies.append(float(latency_s))
+        self.n_completed += 1
+        if from_cache:
+            self.n_cache_hits += 1
+
+    def record_batch(self, n_requests: int, n_lanes: int, bucket: int) -> None:
+        self.n_batches += 1
+        self.n_requests_batched += n_requests
+        self.n_lanes_used += n_lanes
+        self.n_lanes_dispatched += bucket
+
+    def record_rejection(self) -> None:
+        self.n_rejected += 1
+
+    def record_swap(self) -> None:
+        self.n_swaps += 1
+
+    # -- reporting -----------------------------------------------------------
+    def snapshot(self, result_cache_stats: dict | None = None) -> dict:
+        wall = max(time.time() - self.t0, 1e-9)
+        occ = (self.n_requests_batched / self.n_batches
+               if self.n_batches else 0.0)
+        pad_waste = (1.0 - self.n_lanes_used / self.n_lanes_dispatched
+                     if self.n_lanes_dispatched else 0.0)
+        return {
+            "completed": self.n_completed,
+            "rejected": self.n_rejected,
+            "qps": round(self.n_completed / wall, 2),
+            "latency_p50_s": round(percentile(self.latencies, 50), 6),
+            "latency_p99_s": round(percentile(self.latencies, 99), 6),
+            "latency_mean_s": round(float(np.mean(self.latencies)), 6)
+                              if self.latencies else 0.0,
+            "batches": self.n_batches,
+            "mean_batch_occupancy": round(occ, 3),
+            "pad_waste_frac": round(pad_waste, 4),
+            "result_cache_hits": self.n_cache_hits,
+            "plan_buffer_swaps": self.n_swaps,
+            "result_cache": result_cache_stats or {},
+            "plan_cache": plan_cache_stats(),
+        }

@@ -1,0 +1,102 @@
+"""Typed query requests and results for the serving subsystem.
+
+A request names a *program* (SSSP / WCC / PageRank / anything registered in
+``QUERY_KINDS``) plus its per-query parameters and the logical tenant that
+issued it.  Two requests are *batchable* when they share a ``batch_key()``:
+the scheduler may then answer them with one engine dispatch (multi-source
+SSSP vmaps the source axis; parameterless programs like WCC collapse to a
+single run fanned out to every requester).
+
+Results carry full provenance: the plan-buffer version and compaction epoch
+they were served against, the graph fingerprint of that snapshot, and
+whether they came from the epoch-keyed result cache.  The consistency
+contract (tests/test_gserve.py) is that ``value`` is bit-identical to the
+whole-graph oracle evaluated on the snapshot named by ``fingerprint``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any
+
+import numpy as np
+
+
+class AdmissionError(RuntimeError):
+    """Raised by ``GraphServer.submit`` when the pending queue is full."""
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """Static description of a servable query kind."""
+    kind: str
+    batchable: bool          # vmap-able over a per-query parameter axis
+    param: str | None        # name of the batched parameter (None: none)
+    cacheable: bool = True
+
+
+QUERY_KINDS: dict[str, QuerySpec] = {
+    "sssp": QuerySpec("sssp", batchable=True, param="source"),
+    "wcc": QuerySpec("wcc", batchable=False, param=None),
+    "pagerank": QuerySpec("pagerank", batchable=False, param=None),
+}
+
+_REQUEST_IDS = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRequest:
+    kind: str                         # key into QUERY_KINDS
+    tenant: str = "default"
+    source: int | None = None         # sssp: source vertex
+    iters: int | None = None          # pagerank: superstep count
+    id: int = dataclasses.field(default_factory=lambda: next(_REQUEST_IDS))
+
+    def __post_init__(self):
+        spec = QUERY_KINDS.get(self.kind)
+        if spec is None:
+            raise ValueError(f"unknown query kind {self.kind!r}; "
+                             f"known: {sorted(QUERY_KINDS)}")
+        if self.kind == "sssp" and self.source is None:
+            raise ValueError("sssp requires a source vertex")
+
+    @property
+    def spec(self) -> QuerySpec:
+        return QUERY_KINDS[self.kind]
+
+    def batch_key(self) -> tuple:
+        """Requests sharing a batch key may be answered by one dispatch."""
+        if self.kind == "pagerank":
+            return ("pagerank", self.iters)
+        return (self.kind,)
+
+    def cache_key(self) -> tuple:
+        """Identity of the *answer* (within one graph snapshot): tenant is
+        deliberately excluded — tenants share cached results, that is the
+        multi-tenant amortisation the layout exists for."""
+        if self.kind == "sssp":
+            return ("sssp", int(self.source))
+        if self.kind == "pagerank":
+            return ("pagerank", self.iters)
+        return (self.kind,)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    request: QueryRequest
+    value: np.ndarray                 # [V] final vertex state
+    version: int                      # plan-buffer version served against
+    epoch: int                        # plan compaction epoch of that buffer
+    fingerprint: str                  # Graph.fingerprint() of the snapshot
+    supersteps: int
+    from_cache: bool
+    batch_size: int                   # real requests in the micro-batch
+    bucket: int                       # padded batch shape dispatched
+    latency_s: float                  # submit -> result materialised
+
+    def row(self) -> dict[str, Any]:
+        return {"id": self.request.id, "kind": self.request.kind,
+                "tenant": self.request.tenant, "version": self.version,
+                "epoch": self.epoch, "from_cache": self.from_cache,
+                "batch_size": self.batch_size, "bucket": self.bucket,
+                "latency_s": self.latency_s}

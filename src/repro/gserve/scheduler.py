@@ -1,0 +1,121 @@
+"""Micro-batch scheduler: coalesce compatible requests into fixed shapes.
+
+Why fixed shapes: every distinct batch shape is its own jit cache entry, so
+an arbitrary-size batch axis would retrace constantly and the serving path
+would spend its life in XLA compilation.  The batcher therefore *pads to a
+bucket*: a batch of S batchable requests is padded up to the smallest
+configured bucket >= S (repeating the last parameter — the duplicate lanes
+compute a result that is simply dropped), so after one warm-up pass per
+bucket every future micro-batch of any size hits a warm cache.
+
+Coalescing rules (request.batch_key):
+
+  * batchable kinds (SSSP) — up to ``max(buckets)`` requests per dispatch,
+    duplicate parameters deduped into one lane and fanned back out;
+  * parameterless kinds (WCC, PageRank-with-same-iters) — ANY number of
+    concurrent requests collapse into ONE engine run shared by every
+    requesting tenant.
+
+Queues are FIFO per batch key and keys are drained in arrival order of
+their oldest request, so no tenant's query class can starve another's.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+from .request import QueryRequest
+
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+def bucket_for(n: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket >= n (buckets sorted ascending)."""
+    for b in buckets:
+        if b >= n:
+            return b
+    return buckets[-1]
+
+
+def pad_params(params: tuple, bucket: int) -> tuple:
+    """THE padding rule: fill the bucket by repeating the last parameter
+    (duplicate lanes compute a dropped result). Single-sourced here — the
+    server re-pads after cache filtering with the same rule."""
+    return tuple(params) + (params[-1],) * (bucket - len(params))
+
+
+@dataclasses.dataclass(frozen=True)
+class MicroBatch:
+    """One schedulable unit: requests answerable by a single dispatch."""
+    key: tuple                        # shared batch_key
+    requests: tuple[QueryRequest, ...]
+    params: tuple | None              # deduped batched-parameter values
+    lane: tuple[int, ...] | None      # per-request index into params
+    bucket: int                       # padded dispatch shape (>= len(params))
+
+    @property
+    def padded_params(self) -> tuple | None:
+        if self.params is None:
+            return None
+        return pad_params(self.params, self.bucket)
+
+
+class MicroBatcher:
+    """FIFO micro-batch former over per-batch-key queues."""
+
+    def __init__(self, buckets: tuple[int, ...] = DEFAULT_BUCKETS):
+        assert buckets == tuple(sorted(buckets)) and len(buckets) >= 1
+        self.buckets = tuple(int(b) for b in buckets)
+        self._queues: "collections.OrderedDict[tuple, collections.deque]" = \
+            collections.OrderedDict()
+        self._arrival = 0
+        self._order: dict[tuple, int] = {}   # key -> oldest arrival seq
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def add(self, req: QueryRequest) -> None:
+        key = req.batch_key()
+        q = self._queues.get(key)
+        if q is None:
+            q = self._queues[key] = collections.deque()
+        if not q:
+            self._order[key] = self._arrival
+        q.append(req)
+        self._arrival += 1
+
+    def _oldest_key(self) -> tuple | None:
+        live = [(seq, key) for key, seq in self._order.items()
+                if self._queues.get(key)]
+        return min(live)[1] if live else None
+
+    def next_batch(self) -> MicroBatch | None:
+        """Form one micro-batch from the queue whose head arrived first."""
+        key = self._oldest_key()
+        if key is None:
+            return None
+        q = self._queues[key]
+        head = q[0]
+        if head.spec.batchable:
+            take = min(len(q), self.buckets[-1])
+            reqs = tuple(q.popleft() for _ in range(take))
+            # dedupe identical parameters into one lane
+            params: list = []
+            lane: list[int] = []
+            seen: dict = {}
+            pname = head.spec.param
+            for r in reqs:
+                p = getattr(r, pname)
+                if p not in seen:
+                    seen[p] = len(params)
+                    params.append(p)
+                lane.append(seen[p])
+            bucket = bucket_for(len(params), self.buckets)
+            batch = MicroBatch(key, reqs, tuple(params), tuple(lane), bucket)
+        else:
+            # parameterless: every queued request shares one run
+            reqs = tuple(q.popleft() for _ in range(len(q)))
+            batch = MicroBatch(key, reqs, None, None, 1)
+        if not q:
+            self._order.pop(key, None)
+        return batch

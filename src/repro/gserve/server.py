@@ -1,0 +1,374 @@
+"""GraphServer — micro-batched multi-tenant serving over the engine.
+
+The server pulls four pieces together:
+
+  * a ``MicroBatcher`` (scheduler.py) that coalesces compatible requests
+    from many tenants into fixed-shape micro-batches (pad-to-bucket keeps
+    the engine's jit caches warm across arbitrary offered loads);
+  * the partitioned engine's non-blocking dispatch: ``drain()`` is software
+    pipelined — micro-batch i+1 is formed and handed to XLA while batch i's
+    device arrays are still settling (``PendingResult``), so batch-formation
+    overhead hides under device execution;
+  * an epoch-keyed ``ResultCache`` (cache.py) keyed by graph content
+    fingerprint — tenants share answers, and every plan swap drops stale
+    entries;
+  * a *double-buffered plan swap*: the server holds one immutable
+    ``_PlanBuffer`` (engine + graph snapshot + fingerprint + version).  A
+    ``repro.stream`` session publishes epoch-change hooks; on each event the
+    server builds a fresh buffer and atomically swaps the front pointer.
+    In-flight micro-batches captured the OLD buffer at dispatch time and
+    keep draining against it (plans are immutable pytrees — there is no
+    torn/half-patched state to observe); batches formed after the swap see
+    the new one.  Every result is stamped with the buffer it was served
+    from, so callers can check consistency against that exact snapshot.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import Graph
+from ..engine import programs
+from ..engine.runtime import Engine, PendingResult
+from .cache import ResultCache
+from .metrics import ServeMetrics
+from .request import AdmissionError, QueryRequest, QueryResult
+from .scheduler import (DEFAULT_BUCKETS, MicroBatch, MicroBatcher,
+                        bucket_for, pad_params)
+
+
+def _frozen(a: np.ndarray) -> np.ndarray:
+    """Mark an array read-only. Served values and cache entries are shared
+    across tenants (and with the cache itself); a tenant mutating its
+    result must fail loudly, not corrupt everyone else's answers."""
+    a.flags.writeable = False
+    return a
+
+
+@dataclasses.dataclass(frozen=True)
+class _PlanBuffer:
+    """One immutable serving snapshot: everything a micro-batch needs."""
+    engine: Engine
+    graph: Graph
+    epoch: int
+    version: int
+
+    def fingerprint(self) -> str:
+        """Content hash of the snapshot — the result-cache key. Lazy and
+        memoized: a stream update with no query in between never pays the
+        O(E log E) hash; a queried buffer hashes exactly once."""
+        cached = self.__dict__.get("_fingerprint")
+        if cached is None:
+            cached = self.graph.fingerprint()
+            object.__setattr__(self, "_fingerprint", cached)
+        return cached
+
+    def degrees(self) -> jnp.ndarray:
+        cached = self.__dict__.get("_degrees")
+        if cached is None:
+            cached = self.graph.degrees()
+            object.__setattr__(self, "_degrees", cached)
+        return cached
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """A dispatched micro-batch awaiting completion."""
+    batch: MicroBatch
+    buffer: _PlanBuffer
+    pending: PendingResult | None     # None: fully served from cache
+    lane_of: dict[int, int]           # request id -> dispatched lane
+    cached: dict[int, np.ndarray]     # request id -> cache-served value
+    n_lanes: int                      # deduped uncached lanes dispatched
+    bucket: int                       # padded dispatch shape (0: no dispatch)
+    t_dispatch: float
+
+
+class GraphServer:
+    """Accepts typed query requests from many logical tenants and serves
+    them in micro-batches over a (possibly live/streaming) partition plan.
+
+    Construct either over a static ``Engine`` + ``Graph``::
+
+        server = GraphServer(engine=eng, graph=g)
+
+    or bound to a streaming session (subscribes to its epoch-change hooks,
+    double-buffering plan swaps under queries)::
+
+        server = GraphServer.from_session(sess)
+    """
+
+    def __init__(self, engine: Engine, graph: Graph, *,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 max_pending: int = 1024, cache_entries: int = 512,
+                 use_pallas: bool = False,
+                 epoch: int = 0, version: int = 0):
+        self.buckets = tuple(buckets)
+        self.max_pending = int(max_pending)
+        self.use_pallas = bool(use_pallas)
+        self.metrics = ServeMetrics()
+        self.cache = ResultCache(cache_entries)
+        self._batcher = MicroBatcher(self.buckets)
+        self._lock = threading.RLock()
+        self._t_submit: dict[int, float] = {}
+        # bounded: callers that keep ids around collect via result(); old
+        # completed entries age out instead of leaking on long-lived servers
+        self._results: "collections.OrderedDict[int, QueryResult]" = \
+            collections.OrderedDict()
+        self._results_max = max(4 * self.max_pending, 4096)
+        self._session = None
+        self._unsubscribe = None
+        self._cache_dirty = False
+        self._front = self._make_buffer(engine, graph, epoch, version)
+
+    @classmethod
+    def from_session(cls, session, **kwargs) -> "GraphServer":
+        """Bind to a ``repro.stream.StreamSession``: the server snapshots
+        the session's current plan and subscribes to its epoch-change hooks
+        so every installed patch/recompile swaps the front buffer."""
+        srv = cls(session.engine, session.graph(), epoch=session.epoch,
+                  version=session.version, **kwargs)
+        srv._session = session
+        srv._unsubscribe = session.subscribe(srv._on_plan_change)
+        return srv
+
+    def close(self) -> None:
+        if self._unsubscribe is not None:
+            self._unsubscribe()
+            self._unsubscribe = None
+
+    # -- plan double-buffering ----------------------------------------------
+    def _make_buffer(self, engine: Engine, graph: Graph, epoch: int,
+                     version: int) -> _PlanBuffer:
+        # serving runs the XLA segment-reduce path by default: batched
+        # dispatch requires it, and unbatched programs (WCC/PageRank) then
+        # share one code path instead of the interpreted Pallas grid
+        engine = dataclasses.replace(engine, use_pallas=self.use_pallas)
+        return _PlanBuffer(engine, graph, int(epoch), int(version))
+
+    def _on_plan_change(self, session, event: str) -> None:
+        """Epoch-change hook: build the new buffer and swap the front
+        pointer. In-flight batches hold the previous buffer object and
+        finish against it. The result cache is marked dirty rather than
+        purged here — invalidation needs the new content fingerprint, and
+        hashing the edge set on the stream's update hot path would tax
+        updates that no query ever observes; the purge runs on the next
+        cache access instead (stale entries are unreachable in between:
+        every probe is keyed by the captured buffer's fingerprint)."""
+        buf = self._make_buffer(session.engine, session.graph(),
+                                session.epoch, session.version)
+        with self._lock:
+            self._front = buf
+            self._cache_dirty = True
+            self.metrics.record_swap()
+
+    def _maybe_invalidate_cache(self) -> None:
+        """Deferred swap cleanup; call with the lock held, before any cache
+        probe or fill."""
+        if self._cache_dirty:
+            self.cache.invalidate_except(self._front.fingerprint())
+            self._cache_dirty = False
+
+    @property
+    def front(self) -> _PlanBuffer:
+        with self._lock:
+            return self._front
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, req: QueryRequest) -> int:
+        """Enqueue one request; returns its id. Admission control: raises
+        ``AdmissionError`` when ``max_pending`` requests are already
+        queued — shed load at the door rather than queue without bound."""
+        with self._lock:
+            if len(self._batcher) >= self.max_pending:
+                self.metrics.record_rejection()
+                raise AdmissionError(
+                    f"pending queue full ({self.max_pending})")
+            self._t_submit[req.id] = time.time()
+            self._batcher.add(req)
+            return req.id
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._batcher)
+
+    # -- micro-batch execution ----------------------------------------------
+    def _dispatch_batch(self, batch: MicroBatch,
+                        buffer: _PlanBuffer) -> _InFlight:
+        """Hand one micro-batch to the engine without syncing. Cache lookups
+        happen here, at *serve* time, against the captured buffer's
+        fingerprint — a request submitted before a plan swap but batched
+        after it is answered (and labelled) with the post-swap snapshot."""
+        kind = batch.key[0]
+        eng = buffer.engine
+        cached: dict[int, np.ndarray] = {}
+        lane_of: dict[int, int] = {}
+        pending = None
+        n_lanes = 0
+        bucket = 0
+
+        if batch.params is not None:                    # batchable (sssp)
+            # per-lane cache probe, then dispatch only the uncached lanes
+            lane_val: dict[int, np.ndarray] = {}
+            uncached: list[int] = []
+            with self._lock:
+                self._maybe_invalidate_cache()
+                for li, p in enumerate(batch.params):
+                    hit = self.cache.get(buffer.fingerprint(), (kind, int(p)))
+                    if hit is not None:
+                        lane_val[li] = hit
+                    else:
+                        uncached.append(li)
+            for r, li in zip(batch.requests, batch.lane):
+                if li in lane_val:
+                    cached[r.id] = lane_val[li]
+                else:
+                    lane_of[r.id] = uncached.index(li)
+            if uncached:
+                n_lanes = len(uncached)
+                bucket = bucket_for(n_lanes, self.buckets)
+                params = pad_params(tuple(batch.params[li]
+                                          for li in uncached), bucket)
+                pending = eng.dispatch_batched(
+                    programs.SSSP,
+                    {"source": jnp.asarray(params, jnp.int32)})
+        else:                                           # one shared run
+            key = batch.requests[0].cache_key()
+            with self._lock:
+                self._maybe_invalidate_cache()
+                hit = self.cache.get(buffer.fingerprint(), key)
+            if hit is not None:
+                for r in batch.requests:
+                    cached[r.id] = hit
+            else:
+                n_lanes = bucket = 1
+                if kind == "wcc":
+                    pending = eng.dispatch(programs.WCC)
+                elif kind == "pagerank":
+                    iters = batch.requests[0].iters
+                    pending = eng.dispatch(
+                        programs.PAGERANK,
+                        max_supersteps=iters,
+                        degrees=buffer.degrees())
+                else:
+                    raise ValueError(f"unserveable kind {kind!r}")
+        if pending is not None:
+            self.metrics.record_batch(len(batch.requests) - len(cached),
+                                      n_lanes, bucket)
+        return _InFlight(batch, buffer, pending, lane_of, cached,
+                         n_lanes, bucket, time.time())
+
+    def _complete(self, fl: _InFlight) -> list[QueryResult]:
+        """Sync one in-flight batch and materialise per-request results."""
+        values: dict[int, np.ndarray] = dict(fl.cached)
+        supersteps: dict[int, int] = {}
+        if fl.pending is not None:
+            res = fl.pending.result()
+            state = np.asarray(res.state)
+            ss = np.asarray(res.supersteps).reshape(-1)
+            kind = fl.batch.key[0]
+            if fl.batch.params is not None:
+                # fan dispatched lanes back out + fill the cache; copy each
+                # lane so neither results nor cache entries pin the whole
+                # [bucket, V] batch array through a numpy view
+                lane_arr = {dl: _frozen(state[dl].copy())
+                            for dl in set(fl.lane_of.values())}
+                for rid, dl in fl.lane_of.items():
+                    values[rid] = lane_arr[dl]
+                    supersteps[rid] = int(ss[min(dl, len(ss) - 1)])
+                with self._lock:
+                    # only fill the cache if no swap landed mid-flight: a
+                    # put keyed by a dead fingerprint would re-insert a
+                    # stale entry the deferred invalidation already (or
+                    # will never) see
+                    if (not self._cache_dirty and fl.buffer.fingerprint()
+                            == self._front.fingerprint()):
+                        for rid, dl in fl.lane_of.items():
+                            req = next(r for r in fl.batch.requests
+                                       if r.id == rid)
+                            if req.spec.cacheable:
+                                self.cache.put(fl.buffer.fingerprint(),
+                                               req.cache_key(),
+                                               lane_arr[dl])
+            else:
+                state = _frozen(state)
+                for r in fl.batch.requests:
+                    values[r.id] = state
+                    supersteps[r.id] = int(ss.max())
+                if fl.batch.requests[0].spec.cacheable:
+                    with self._lock:
+                        if (not self._cache_dirty
+                                and fl.buffer.fingerprint()
+                                == self._front.fingerprint()):
+                            self.cache.put(fl.buffer.fingerprint(),
+                                           fl.batch.requests[0].cache_key(),
+                                           state)
+        now = time.time()
+        out = []
+        with self._lock:
+            for r in fl.batch.requests:
+                t0 = self._t_submit.pop(r.id, now)
+                qr = QueryResult(
+                    request=r, value=values[r.id],
+                    version=fl.buffer.version, epoch=fl.buffer.epoch,
+                    fingerprint=fl.buffer.fingerprint(),
+                    supersteps=supersteps.get(r.id, 0),
+                    from_cache=r.id in fl.cached,
+                    batch_size=len(fl.batch.requests), bucket=fl.bucket,
+                    latency_s=now - t0)
+                self._results[r.id] = qr
+                self.metrics.record_result(qr.latency_s, qr.from_cache)
+                out.append(qr)
+            while len(self._results) > self._results_max:
+                self._results.popitem(last=False)
+        return out
+
+    def pump(self) -> list[QueryResult]:
+        """Serve exactly one micro-batch (or nothing if the queue is empty)."""
+        with self._lock:
+            batch = self._batcher.next_batch()
+            buffer = self._front
+        if batch is None:
+            return []
+        return self._complete(self._dispatch_batch(batch, buffer))
+
+    def drain(self) -> list[QueryResult]:
+        """Serve until the queue is empty, software-pipelined: the next
+        micro-batch is formed and dispatched while the previous one's device
+        computation settles."""
+        done: list[QueryResult] = []
+        inflight: _InFlight | None = None
+        while True:
+            with self._lock:
+                batch = self._batcher.next_batch()
+                buffer = self._front
+            nxt = (self._dispatch_batch(batch, buffer)
+                   if batch is not None else None)
+            if inflight is not None:
+                done.extend(self._complete(inflight))
+            inflight = nxt
+            if inflight is None:
+                return done
+
+    def serve(self, requests: list[QueryRequest]) -> list[QueryResult]:
+        """Convenience: submit a burst and drain it; results in input order."""
+        ids = [self.submit(r) for r in requests]
+        self.drain()
+        # a concurrent drainer may have coalesced some of our requests into
+        # its own still-in-flight micro-batch: its queue pop beat ours, so
+        # wait for those results to materialise rather than KeyError
+        while any(i not in self._results for i in ids):
+            self.drain()
+            time.sleep(1e-3)
+        return [self._results[i] for i in ids]
+
+    def result(self, request_id: int) -> QueryResult | None:
+        return self._results.get(request_id)
+
+    def stats(self) -> dict:
+        return self.metrics.snapshot(self.cache.stats())

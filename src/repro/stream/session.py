@@ -24,6 +24,7 @@ whole-graph oracles on ``session.graph()`` (tests/test_stream.py).
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 import numpy as np
 
@@ -66,8 +67,33 @@ class StreamSession:
         self.n_patches = 0
         self.n_recompiles = 0
         self.n_reauctions = 0
+        # monotone plan-version token: bumps on EVERY installed plan (patch,
+        # re-auction patch, or compaction recompile) — the serving layer's
+        # epoch-change signal. ``epoch`` only tracks compactions (retraces).
+        self.version = 0
+        self._subscribers: list[Callable[["StreamSession", str], None]] = []
         self._compile()
         self.rf_base = self.plan.replication_factor()
+
+    # -- epoch-change hooks (the serving layer subscribes) -------------------
+    def subscribe(self, fn: Callable[["StreamSession", str], None]):
+        """Register ``fn(session, event)`` to run after every installed plan
+        change, with ``event`` in {"patch", "recompile"}. By the time the
+        hook fires, ``self.plan`` / ``self.engine`` / ``self.version`` are
+        the NEW state; the previous plan object is untouched (plans are
+        immutable pytrees), so in-flight consumers of it keep draining
+        against a consistent snapshot. Returns an unsubscribe callable."""
+        self._subscribers.append(fn)
+
+        def unsubscribe() -> None:
+            if fn in self._subscribers:
+                self._subscribers.remove(fn)
+        return unsubscribe
+
+    def _notify(self, event: str) -> None:
+        self.version += 1
+        for fn in list(self._subscribers):
+            fn(self, event)
 
     # -- plan lifecycle -----------------------------------------------------
     def _slack(self) -> tuple[int, int]:
@@ -98,6 +124,7 @@ class StreamSession:
         self.epoch += 1
         self.n_recompiles += 1
         self._compile()
+        self._notify("recompile")
 
     def _patch(self, changes: list[EdgeChange]) -> None:
         if not changes:
@@ -106,6 +133,7 @@ class StreamSession:
             self.plan = patch_plan(self.plan, changes)
             self.engine = self.engine.with_plan(self.plan)
             self.n_patches += 1
+            self._notify("patch")
         except SlackExhausted:
             self._recompile()
 

@@ -116,6 +116,41 @@ def test_multi_source_batched(graphs):
         assert np.array_equal(np.asarray(res.state[i]), np.asarray(ref)), s
 
 
+def test_plan_cache_counters_and_lru_eviction():
+    """compile_plan_cached observability: hits/misses count, and filling the
+    cache past _PLAN_CACHE_MAX evicts in LRU order."""
+    from repro.engine import plan as P
+
+    E.plan_cache_clear(reset_counters=True)
+    base = graph.watts_strogatz(60, 4, 0.1, seed=9)
+    owner = np.where(np.asarray(base.edge_mask), 0, -2)
+
+    p1 = E.compile_plan_cached(base, owner, 2)
+    assert E.plan_cache_stats()["misses"] == 1
+    assert E.compile_plan_cached(base, owner, 2) is p1
+    assert E.plan_cache_stats()["hits"] == 1
+
+    # fill with distinct (k) keys: the k=2 entry is oldest EXCEPT that we
+    # re-touch it halfway, so LRU must evict the untouched k=3 entry instead
+    for k in range(3, 3 + P._PLAN_CACHE_MAX - 1):
+        E.compile_plan_cached(base, owner, k)
+    assert E.plan_cache_stats()["size"] == P._PLAN_CACHE_MAX
+    assert E.plan_cache_stats()["evictions"] == 0
+    assert E.compile_plan_cached(base, owner, 2) is p1       # touch (hit)
+    E.compile_plan_cached(base, owner, 3 + P._PLAN_CACHE_MAX)  # overflow
+    st = E.plan_cache_stats()
+    assert st["evictions"] == 1 and st["size"] == P._PLAN_CACHE_MAX
+    assert E.compile_plan_cached(base, owner, 2) is p1       # survived (MRU)
+    hits = E.plan_cache_stats()["hits"]
+    E.compile_plan_cached(base, owner, 3)                    # evicted: miss
+    st = E.plan_cache_stats()
+    assert st["hits"] == hits and st["misses"] >= 2
+    assert st["evictions"] == 2                              # re-add evicted
+    E.plan_cache_clear(reset_counters=True)
+    st = E.plan_cache_stats()
+    assert st["size"] == 0 and st["hits"] == st["misses"] == 0
+
+
 def test_segment_reduce_matches_reference(graphs):
     """Pallas segmented-scan reduce == XLA scatter reference, min and add."""
     from repro.engine import kernels

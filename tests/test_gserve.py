@@ -1,0 +1,274 @@
+"""repro.gserve correctness: micro-batch scheduling (pad-to-bucket, FIFO
+coalescing), result-cache sharing across tenants with exact content-keyed
+invalidation, admission control, warm jit caches across bursts, and the
+serving-under-mutation contract — every result bit-identical to the
+whole-graph oracle for the snapshot (version) it was served from, with no
+stale cache entry surviving a plan swap."""
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import dfep, graph
+from repro import engine as E
+from repro import gserve as G
+from repro import stream as S
+from repro.engine import runtime
+
+
+def _static_server(n=150, k=4, seed=3, **kw):
+    g = graph.watts_strogatz(n, 4, 0.2, seed=seed)
+    owner, _ = dfep.partition(g, k=k, key=0)
+    plan = E.compile_plan(g, np.asarray(owner), k)
+    return g, G.GraphServer(E.Engine(plan), g, **kw)
+
+
+def _check(result, g):
+    req = result.request
+    if req.kind == "sssp":
+        ref, _ = alg.reference_sssp(g, req.source)
+        assert np.array_equal(result.value, np.asarray(ref)), req
+    elif req.kind == "wcc":
+        ref, _ = alg.reference_cc(g)
+        assert np.array_equal(result.value, np.asarray(ref)), req
+    else:
+        ref = alg.reference_pagerank(g, iters=req.iters)
+        np.testing.assert_allclose(result.value, np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_bucket_for():
+    assert G.bucket_for(1, (1, 2, 4)) == 1
+    assert G.bucket_for(3, (1, 2, 4)) == 4
+    assert G.bucket_for(9, (1, 2, 4)) == 4      # clamped to largest
+
+
+def test_microbatcher_coalescing_and_fifo():
+    b = G.MicroBatcher(buckets=(1, 2, 4))
+    reqs = [G.QueryRequest("sssp", tenant="a", source=1),
+            G.QueryRequest("wcc", tenant="b"),
+            G.QueryRequest("sssp", tenant="b", source=2),
+            G.QueryRequest("sssp", tenant="c", source=1),   # dup source
+            G.QueryRequest("wcc", tenant="c"),
+            G.QueryRequest("pagerank", tenant="a", iters=5)]
+    for r in reqs:
+        b.add(r)
+    assert len(b) == 6
+    m1 = b.next_batch()                 # sssp queue arrived first
+    assert m1.key == ("sssp",) and len(m1.requests) == 3
+    assert m1.params == (1, 2)          # dedup within the batch
+    assert m1.lane == (0, 1, 0)
+    assert m1.bucket == 2
+    assert m1.padded_params == (1, 2)
+    m2 = b.next_batch()                 # both wcc requests share one run
+    assert m2.key == ("wcc",) and len(m2.requests) == 2 and m2.params is None
+    m3 = b.next_batch()
+    assert m3.key == ("pagerank", 5)
+    assert b.next_batch() is None and len(b) == 0
+
+
+def test_padded_params_repeat_last():
+    b = G.MicroBatcher(buckets=(4,))
+    for s in (5, 9, 13):
+        b.add(G.QueryRequest("sssp", source=s))
+    m = b.next_batch()
+    assert m.bucket == 4 and m.padded_params == (5, 9, 13, 13)
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        G.QueryRequest("sssp")                   # missing source
+    with pytest.raises(ValueError):
+        G.QueryRequest("betweenness")            # unknown kind
+
+
+# ---------------------------------------------------------------------------
+# static serving
+# ---------------------------------------------------------------------------
+
+def test_serve_matches_oracles_mixed_tenants():
+    g, srv = _static_server(buckets=(1, 2, 4, 8))
+    reqs = [G.QueryRequest("sssp", tenant=f"t{i % 3}", source=(i * 7) % 150)
+            for i in range(10)]
+    reqs += [G.QueryRequest("wcc", tenant="t3"),
+             G.QueryRequest("wcc", tenant="t4"),
+             G.QueryRequest("pagerank", tenant="t5", iters=10)]
+    out = srv.serve(reqs)
+    assert [r.request.id for r in out] == [r.id for r in reqs]
+    for r in out:
+        _check(r, g)
+    st = srv.stats()
+    # 13 requests but far fewer dispatches: sssp coalesced, wcc shared
+    assert st["completed"] == 13 and st["batches"] <= 4
+    assert st["mean_batch_occupancy"] > 1.0
+
+
+def test_result_cache_shared_across_tenants():
+    g, srv = _static_server()
+    a = srv.serve([G.QueryRequest("sssp", tenant="a", source=11)])[0]
+    assert not a.from_cache
+    b = srv.serve([G.QueryRequest("sssp", tenant="b", source=11)])[0]
+    assert b.from_cache and np.array_equal(a.value, b.value)
+    w1 = srv.serve([G.QueryRequest("wcc", tenant="a")])[0]
+    w2 = srv.serve([G.QueryRequest("wcc", tenant="b")])[0]
+    assert not w1.from_cache and w2.from_cache
+    assert srv.stats()["result_cache"]["hits"] >= 2
+    # served values are shared across tenants and with the cache: mutation
+    # must fail loudly instead of corrupting other tenants' answers
+    for res in (a, b, w1, w2):
+        with pytest.raises(ValueError):
+            res.value[0] = -1.0
+
+
+def test_admission_control():
+    _, srv = _static_server(max_pending=2)
+    srv.submit(G.QueryRequest("sssp", source=1))
+    srv.submit(G.QueryRequest("sssp", source=2))
+    with pytest.raises(G.AdmissionError):
+        srv.submit(G.QueryRequest("sssp", source=3))
+    assert srv.stats()["rejected"] == 1
+    out = srv.drain()                   # queue drains; door reopens
+    assert len(out) == 2
+    srv.submit(G.QueryRequest("sssp", source=3))
+    assert len(srv.drain()) == 1
+
+
+def test_pad_to_bucket_keeps_jit_cache_warm():
+    """Bursts of any size <= bucket reuse one compiled batched loop: after
+    the first burst warms the (bucket=4) shape, later bursts of 2, 3 and 4
+    distinct sources must not retrace."""
+    g, srv = _static_server(buckets=(4,))
+    srv.serve([G.QueryRequest("sssp", source=s) for s in (1, 2, 3)])
+    traced = runtime.TRACE_COUNTER["run_loop"]
+    srv.serve([G.QueryRequest("sssp", source=s) for s in (20, 21)])
+    srv.serve([G.QueryRequest("sssp", source=s) for s in (30, 31, 32, 33)])
+    out = srv.serve([G.QueryRequest("sssp", source=s) for s in (40, 41, 42)])
+    assert runtime.TRACE_COUNTER["run_loop"] == traced, \
+        "padded micro-batches must hit the warm jit cache"
+    for r in out:
+        _check(r, g)
+        assert r.bucket == 4
+
+
+def test_nonblocking_dispatch_overlap():
+    """dispatch_batched returns before results are materialised and several
+    in-flight batches can settle out of order."""
+    g, srv = _static_server()
+    eng = srv.front.engine
+    p1 = eng.dispatch_batched(E.SSSP, {"source": np.array([0, 5], np.int32)})
+    p2 = eng.dispatch_batched(E.SSSP, {"source": np.array([9, 2], np.int32)})
+    r2 = p2.result()
+    r1 = p1.result()
+    for res, sources in ((r1, (0, 5)), (r2, (9, 2))):
+        for i, s in enumerate(sources):
+            ref, _ = alg.reference_sssp(g, s)
+            assert np.array_equal(np.asarray(res.state[i]), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# serving under mutation (stream integration)
+# ---------------------------------------------------------------------------
+
+def _session_server(n=200, k=4, seed=3, **kw):
+    g = graph.watts_strogatz(n, 4, 0.2, seed=seed)
+    sess = S.StreamSession(g, S.StreamConfig(k=k, chunk_size=32,
+                                             drift_threshold=1e9), key=0)
+    srv = G.GraphServer.from_session(sess, **kw)
+    return sess, srv
+
+
+def test_plan_swap_on_stream_update():
+    sess, srv = _session_server()
+    r0 = srv.serve([G.QueryRequest("sssp", source=0)])[0]
+    assert r0.version == 0 and not r0.from_cache
+    sess.apply(inserts=np.array([[1, 150], [2, 160]]))
+    r1 = srv.serve([G.QueryRequest("sssp", source=0)])[0]
+    assert r1.version > r0.version and r1.fingerprint != r0.fingerprint
+    assert not r1.from_cache, "cache must not serve across a plan swap"
+    _check(r1, sess.graph())
+    assert srv.stats()["plan_buffer_swaps"] >= 1
+
+
+def test_inflight_queries_drain_against_captured_buffer():
+    """Double-buffer semantics: a batch pumped before the swap is labelled
+    with (and correct for) the old snapshot; the rest of the queue drains
+    against the new one."""
+    sess, srv = _session_server(buckets=(2,))
+    g_old = sess.graph()
+    for s in (0, 3, 9, 12):
+        srv.submit(G.QueryRequest("sssp", source=s))
+    first = srv.pump()                         # one bucket=2 batch, old plan
+    assert [r.request.source for r in first] == [0, 3]
+    sess.apply(inserts=np.array([[0, 100], [3, 150], [9, 180]]))
+    rest = srv.drain()                         # remaining queue, new plan
+    g_new = sess.graph()
+    assert g_old.fingerprint() != g_new.fingerprint()
+    for r in first:
+        assert r.version == 0
+        _check(r, g_old)
+    for r in rest:
+        assert r.version > 0
+        _check(r, g_new)
+
+
+def test_serving_under_mutation_stress():
+    """Acceptance stress: interleave stream update batches with server
+    query bursts. Every returned result must be bit-identical to the oracle
+    for the snapshot it was served from, and no stale result-cache entry
+    may survive a version bump."""
+    sess, srv = _session_server(n=200, buckets=(1, 2, 4))
+    snapshots = {sess.version: sess.graph()}
+    sess.subscribe(lambda s, event: snapshots.setdefault(s.version,
+                                                         s.graph()))
+    rng = np.random.default_rng(7)
+    n_v = sess.graph().n_vertices
+    results = []
+    for round_ in range(4):
+        # a burst of multi-tenant queries ...
+        reqs = [G.QueryRequest("sssp", tenant=f"t{i % 3}",
+                               source=int(rng.integers(0, n_v)))
+                for i in range(5)]
+        reqs.append(G.QueryRequest("wcc", tenant="t0"))
+        if round_ % 2:
+            reqs.append(G.QueryRequest("pagerank", tenant="t1", iters=8))
+        for r in reqs:
+            srv.submit(r)
+        results.extend(srv.pump())             # partially drain ...
+        # ... mutate mid-queue (plan swap while requests are pending) ...
+        gu, gv = sess.graph().as_numpy()
+        kill = rng.choice(len(gu), size=4, replace=False)
+        sess.apply(inserts=rng.integers(0, n_v, size=(6, 2)),
+                   deletes=np.stack([gu[kill], gv[kill]], 1))
+        # ... then drain the rest against the swapped-in plan
+        results.extend(srv.drain())
+        # stale cache entries must not survive the bump
+        fps = srv.cache.fingerprints()
+        assert fps <= {sess.graph().fingerprint()}, \
+            "result cache holds entries for a dead fingerprint"
+    assert len(results) == 4 * 6 + 2
+    served_versions = {r.version for r in results}
+    assert len(served_versions) >= 3, "stress never spanned a plan swap"
+    for r in results:
+        g_at = snapshots[r.version]
+        assert r.fingerprint == g_at.fingerprint()
+        _check(r, g_at)
+
+
+def test_epoch_bump_compaction_consistency():
+    """Force a compaction epoch (spare slots exhausted) under serving: the
+    post-compaction buffer answers correctly and carries the new epoch."""
+    g = graph.watts_strogatz(100, 4, 0.1, seed=1)   # small padding
+    sess = S.StreamSession(g, S.StreamConfig(k=3, chunk_size=32,
+                                             drift_threshold=1e9), key=0)
+    srv = G.GraphServer.from_session(sess)
+    r0 = srv.serve([G.QueryRequest("sssp", source=0)])[0]
+    assert r0.epoch == 0
+    rng = np.random.default_rng(1)
+    stats = sess.apply(inserts=rng.integers(0, 100, size=(400, 2)))
+    assert stats["recompiles"] >= 1
+    r1 = srv.serve([G.QueryRequest("sssp", source=0)])[0]
+    assert r1.epoch == sess.epoch >= 1
+    assert not r1.from_cache
+    _check(r1, sess.graph())
