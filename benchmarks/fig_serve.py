@@ -23,6 +23,7 @@ bucket >= 8 beats the sequential baseline.
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import numpy as np
@@ -37,7 +38,7 @@ from .common import SCALE, emit_json
 
 def _queries(rng, n_v: int, n: int) -> list:
     return [G.QueryRequest("sssp", tenant=f"t{i % 8}",
-                           source=int(rng.integers(0, n_v)))
+                           params={"source": int(rng.integers(0, n_v))})
             for i in range(n)]
 
 
@@ -47,7 +48,7 @@ def _sequential(eng, reqs) -> dict:
     t_all = time.time()
     for r in reqs:
         t0 = time.time()
-        E.engine_sssp(eng, r.source).state.block_until_ready()
+        E.engine_sssp(eng, r.params["source"]).state.block_until_ready()
         lat.append(time.time() - t0)
     wall = time.time() - t_all
     return {"mode": "sequential", "bucket": 1, "n_queries": len(reqs),
@@ -100,6 +101,46 @@ def _batched(plan, g, reqs, bucket: int, *, session=None,
             "plan_buffer_swaps": st["plan_buffer_swaps"]}
 
 
+def _timer_flush(plan, g, bucket: int, n_queries: int, gap_s: float,
+                 max_wait_s: float | None, rng) -> dict:
+    """Low-offered-load point: queries trickle in one at a time (``gap_s``
+    apart, far too slow to fill a bucket) while the main thread drains.
+    Without a timer the greedy drain dispatches singleton buckets; with
+    ``max_wait_s`` partial buckets wait for the deadline to coalesce — the
+    timer bounds p99 while raising occupancy."""
+    srv = G.GraphServer(E.Engine(plan), g, buckets=(1, bucket),
+                        cache_entries=0, max_wait_s=max_wait_s)
+    srv.serve(_queries(np.random.default_rng(98), g.n_vertices, bucket))
+    srv.serve(_queries(np.random.default_rng(97), g.n_vertices, 1))
+    srv.metrics.reset()
+    reqs = _queries(rng, g.n_vertices, n_queries)
+
+    def trickle():
+        for r in reqs:
+            srv.submit(r)
+            time.sleep(gap_s)
+
+    t_all = time.time()
+    feeder = threading.Thread(target=trickle)
+    feeder.start()
+    served = 0
+    while served < n_queries:
+        served += len(srv.drain())
+        time.sleep(1e-3)
+    wall = time.time() - t_all
+    feeder.join()
+    st = srv.stats()
+    return {"mode": ("batched+timer" if max_wait_s is not None
+                     else "batched+trickle"),
+            "bucket": bucket, "n_queries": n_queries,
+            "max_wait_s": max_wait_s, "offered_gap_s": gap_s,
+            "qps": round(n_queries / wall, 2),
+            "p50_s": st["latency_p50_s"], "p99_s": st["latency_p99_s"],
+            "batches": st["batches"],
+            "mean_batch_occupancy": st["mean_batch_occupancy"],
+            "pad_waste_frac": st["pad_waste_frac"]}
+
+
 def run(dataset: str = "email-enron", scale: float = SCALE, k: int = 8,
         n_queries: int = 48, buckets=(1, 4, 8, 16),
         stream_update_batches: int = 4) -> dict:
@@ -124,6 +165,13 @@ def run(dataset: str = "email-enron", scale: float = SCALE, k: int = 8,
     rows.append(_batched(plan, g, reqs, max(buckets), session=sess,
                          update_batches=stream_update_batches,
                          rng=np.random.default_rng(5)))
+
+    # timer-based flush at low offered load: trickled submissions with and
+    # without a deadline (greedy singleton dispatch vs bounded coalescing)
+    for wait in (None, 0.05):
+        rows.append(_timer_flush(plan, g, bucket=max(buckets),
+                                 n_queries=16, gap_s=0.01, max_wait_s=wait,
+                                 rng=np.random.default_rng(11)))
 
     seq_qps = rows[0]["qps"]
     by_bucket = {r["bucket"]: r["qps"] for r in rows if r["mode"] == "batched"}

@@ -17,7 +17,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6,fig7,fig8,fig9,fig10,"
-                         "stream,serve,kernels")
+                         "stream,serve,programs,kernels")
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
     if args.fast:
@@ -26,8 +26,8 @@ def main() -> None:
 
     # imports AFTER env so common.py picks the scales up
     from . import (fig5_k_sweep, fig6_diameter, fig7_comparison,
-                   fig8_scalability, fig9_sssp, fig10_engine, fig_serve,
-                   fig_stream, kernel_bench)
+                   fig8_scalability, fig9_sssp, fig10_engine, fig_programs,
+                   fig_serve, fig_stream, kernel_bench)
 
     all_benches = {
         "fig5": fig5_k_sweep.main,
@@ -38,6 +38,7 @@ def main() -> None:
         "fig10": fig10_engine.main,
         "stream": fig_stream.main,
         "serve": fig_serve.main,
+        "programs": fig_programs.main,
         "kernels": kernel_bench.main,
     }
     only = args.only.split(",") if args.only else list(all_benches)

@@ -10,9 +10,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from .etsch import (EtschResult, Partitioning, Problem, min_relax_sweep,
                     run_etsch)
-from .graph import Graph
+from .graph import Graph, edge_weights
 
 INF = jnp.float32(jnp.inf)
 
@@ -216,6 +218,39 @@ def reference_pagerank(g: Graph, iters: int = 30, damping: float = 0.85):
 
     rank, _ = jax.lax.scan(step, rank, None, length=iters)
     return rank
+
+
+def reference_weighted_sssp(g: Graph, source: int) -> np.ndarray:
+    """Weighted shortest paths under the deterministic content-hash weights
+    (``graph.edge_weights``), iterated to the relaxation fixpoint.
+
+    Host-side numpy, float32 throughout: each relaxation computes
+    ``min(d[v], f32(d[u] + w))`` — the identical IEEE op sequence the
+    engine's min-plus sweeps perform, so f32 min-plus relaxation converges
+    to the same unique fixpoint and engine results are *bit-identical*
+    (both iterate a monotone map over the finite f32 lattice from +inf).
+    """
+    u, v = g.as_numpy()
+    w = edge_weights(u, v)
+    dist = np.full(g.n_vertices, np.inf, np.float32)
+    dist[int(source)] = 0.0
+    for _ in range(g.n_vertices):
+        nd = dist.copy()
+        np.minimum.at(nd, v, (dist[u] + w).astype(np.float32))
+        np.minimum.at(nd, u, (dist[v] + w).astype(np.float32))
+        if np.array_equal(nd, dist, equal_nan=True):
+            break
+        dist = nd
+    return dist
+
+
+def reference_bfs(g: Graph, source: int) -> np.ndarray:
+    """BFS hop levels: 0.0 at the source, the hop count elsewhere, and
+    -1.0 for vertices unreachable from the source (float32, matching the
+    engine program's finalized output)."""
+    d, _ = reference_sssp(g, jnp.int32(source))
+    d = np.asarray(d)
+    return np.where(np.isinf(d), np.float32(-1.0), d).astype(np.float32)
 
 
 def is_independent_set(g: Graph, in_set: jax.Array) -> jax.Array:

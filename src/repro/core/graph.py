@@ -78,6 +78,30 @@ class Graph:
         return h.hexdigest()
 
 
+#: Modulus of the deterministic edge-weight hash (prime, so the low bits of
+#: the endpoint mix spread evenly over [1, 2)).
+EDGE_WEIGHT_MOD = 1_000_003
+
+
+def edge_weights(u, v) -> np.ndarray:
+    """Deterministic per-edge float32 weights in [1, 2).
+
+    Weights are a pure content hash of the (undirected) endpoint pair, so
+    every layer reconstructs identical values independently — plan
+    compilation bakes them into ``PartitionPlan.edge_w``, the streaming
+    patch path recomputes them for appended half-edges, and the
+    whole-graph oracles (``core.algorithms.reference_weighted_sssp``) use
+    the same function — without any layer shipping a weight array around
+    or the graph fingerprint having to cover more than the edge set.
+    The [1, 2) range keeps weighted relaxation convergence within the same
+    superstep bounds as unit-weight SSSP.
+    """
+    a = np.minimum(u, v).astype(np.int64)
+    b = np.maximum(u, v).astype(np.int64)
+    h = (a * 2654435761 + b * 97_571 + 12_345) % EDGE_WEIGHT_MOD
+    return (1.0 + h / EDGE_WEIGHT_MOD).astype(np.float32)
+
+
 def apply_edge_updates(g: Graph, slots: np.ndarray, new_src: np.ndarray,
                        new_dst: np.ndarray, new_mask: np.ndarray) -> Graph:
     """Functional slot-level mutation: write (src, dst, mask) at ``slots``.

@@ -1,19 +1,33 @@
 """repro.engine — edge-centric partitioned execution engine.
 
 Pipeline: partition (core/dfep.py, core/baselines.py) → compile_plan →
-Engine.run(program). See src/repro/engine/README.md for the design.
+Engine.run(program). Programs declare themselves once in the
+``ProgramRegistry`` (engine/registry.py) and the serving stack derives
+everything downstream from the entry. See src/repro/engine/README.md for
+the design and for registering your own program.
 """
+from .errors import (BatchAxisError, DuplicateProgramError, ParamTypeError,
+                     RegistryError, UnknownParamError, UnknownProgramError,
+                     WarmStateError)
 from .plan import (PartitionPlan, compile_plan, compile_plan_cached,
                    plan_cache_clear, plan_cache_stats)
+from .registry import (DEFAULT_REGISTRY, ParamSpec, ProgramEntry,
+                       ProgramRegistry, get_program, program_names, register,
+                       unregister)
 from .runtime import (TRACE_COUNTER, EdgeProgram, Engine, EngineResult,
                       PendingResult)
-from .programs import (PAGERANK, SSSP, WCC, engine_pagerank, engine_sssp,
-                       engine_wcc, multi_source_sssp)
+from .programs import (BFS, PAGERANK, SSSP, WCC, WEIGHTED_SSSP, engine_bfs,
+                       engine_pagerank, engine_sssp, engine_wcc,
+                       engine_weighted_sssp, multi_source_sssp)
 
 __all__ = [
-    "PartitionPlan", "compile_plan", "compile_plan_cached",
-    "plan_cache_clear", "plan_cache_stats", "EdgeProgram", "Engine",
-    "EngineResult", "PendingResult", "TRACE_COUNTER", "SSSP", "WCC",
-    "PAGERANK", "engine_sssp", "engine_wcc", "engine_pagerank",
-    "multi_source_sssp",
+    "BFS", "BatchAxisError", "DEFAULT_REGISTRY", "DuplicateProgramError",
+    "EdgeProgram", "Engine", "EngineResult", "PAGERANK", "ParamSpec",
+    "ParamTypeError", "PartitionPlan", "PendingResult", "ProgramEntry",
+    "ProgramRegistry", "RegistryError", "SSSP", "TRACE_COUNTER",
+    "UnknownParamError", "UnknownProgramError", "WCC", "WEIGHTED_SSSP",
+    "WarmStateError", "compile_plan", "compile_plan_cached", "engine_bfs",
+    "engine_pagerank", "engine_sssp", "engine_wcc", "engine_weighted_sssp",
+    "get_program", "multi_source_sssp", "plan_cache_clear",
+    "plan_cache_stats", "program_names", "register", "unregister",
 ]

@@ -1,0 +1,45 @@
+"""Typed errors for the program registry and warm-started dispatch.
+
+Every registry misuse raises a distinct subclass of ``RegistryError`` with
+an actionable message (what was wrong, what the caller should pass
+instead).  ``RegistryError`` subclasses ``ValueError`` so pre-registry
+callers that caught ``ValueError`` on bad requests keep working.
+
+Kept in their own module so both ``engine.registry`` (validation) and
+``engine.runtime`` (warm-state shape checks at dispatch) can raise them
+without importing each other.
+"""
+from __future__ import annotations
+
+
+class RegistryError(ValueError):
+    """Base class for program-registry misuse."""
+
+
+class DuplicateProgramError(RegistryError):
+    """A program name was registered twice."""
+
+
+class UnknownProgramError(RegistryError):
+    """A query named a program that was never registered."""
+
+
+class UnknownParamError(RegistryError):
+    """A query passed a parameter the program's ParamSpec does not declare."""
+
+
+class ParamTypeError(RegistryError):
+    """A parameter value has the wrong dtype, or a required one is missing."""
+
+
+class BatchAxisError(RegistryError):
+    """A scalar parameter was passed a sequence/array (a batch axis).
+
+    The micro-batch axis is formed by the scheduler coalescing *requests*;
+    a single request always carries scalar parameter values.
+    """
+
+
+class WarmStateError(RegistryError):
+    """``warm_state`` was passed to a program without a ``warm_init`` hook,
+    or its shape does not match the plan's vertex space."""

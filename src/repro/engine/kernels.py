@@ -24,6 +24,13 @@ Two kernels, both specialized to the ``PartitionPlan`` CSR blocks:
 
 Both support combine ∈ {"min", "add"} (SSSP/WCC vs PageRank) and run in
 interpret mode on CPU.
+
+The message stream is per-half-edge, so weighted programs need no kernel
+changes: the runtime applies the ``EdgeProgram.edge`` hook (e.g.
+``msgs + plan.edge_w`` for weighted SSSP) after the neighbour gather, and
+the weighted messages flow through the same segmented scan — masked
+(deleted/padding) slots are pinned to the combine identity *after* the
+hook, so they stay inert regardless of their weight.
 """
 from __future__ import annotations
 

@@ -50,7 +50,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core.graph import Graph
+from ..core.graph import Graph, edge_weights
 
 
 @jax.tree_util.register_pytree_node_class
@@ -86,13 +86,18 @@ class PartitionPlan:
     n_replicated: jax.Array  # [K] int32 — replicated slots per partition
     csr_fill: jax.Array      # [K] int32 — first slot of the append region
     v_fill: jax.Array        # [K] int32 — next free local-vertex slot
+    # per-half-edge weights (graph.edge_weights content hash; pad: 1.0) —
+    # weighted programs consume them via the EdgeProgram ``edge`` hook
+    # (messages flow weighted through the segment-reduce kernels; masked
+    # slots are still pinned to the combine identity there)
+    edge_w: jax.Array        # [K, Emax] float32
 
     def tree_flatten(self):
         children = (self.local2global, self.vmask, self.edge_tgt,
                     self.edge_nbr, self.emask, self.seg_start, self.last_slot,
                     self.replicated, self.is_master, self.n_local,
                     self.n_edges_local, self.n_replicated, self.csr_fill,
-                    self.v_fill)
+                    self.v_fill, self.edge_w)
         return children, (self.k, self.n_vertices, self.v_max, self.e_max,
                           self.epoch)
 
@@ -199,6 +204,7 @@ def compile_plan(g: Graph, owner, k: int, *, edge_slack: int = 0,
     nbr = np.zeros((k, e_max), np.int32)
     emask_p = np.zeros((k, e_max), bool)
     seg_start = np.zeros((k, e_max), bool)
+    ew = np.ones((k, e_max), np.float32)
     # degree-0/pad vertices point at the last slot, which is always padding
     last_slot = np.full((k, v_max), e_max - 1, np.int32)
 
@@ -213,11 +219,13 @@ def compile_plan(g: Graph, owner, k: int, *, edge_slack: int = 0,
         ut, vt = g2l[u[sel]], g2l[v[sel]]
         t = np.concatenate([ut, vt])            # half-edge targets
         n = np.concatenate([vt, ut])            # half-edge sources
+        w2 = np.tile(edge_weights(u[sel], v[sel]), 2)   # both half-edges
         order = np.argsort(t, kind="stable")
-        t, n = t[order], n[order]
+        t, n, w2 = t[order], n[order], w2[order]
         ne = len(t)
         tgt[i, :ne] = t
         nbr[i, :ne] = n
+        ew[i, :ne] = w2
         emask_p[i, :ne] = True
         if ne:
             seg_start[i, 0] = True
@@ -245,6 +253,7 @@ def compile_plan(g: Graph, owner, k: int, *, edge_slack: int = 0,
         n_replicated=jnp.asarray(replicated.sum(1).astype(np.int32)),
         csr_fill=jnp.asarray(2 * e_cnt),
         v_fill=jnp.asarray(n_local),
+        edge_w=jnp.asarray(ew),
     )
 
 

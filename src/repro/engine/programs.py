@@ -1,23 +1,40 @@
 """Graph programs expressed against the engine API, validated against the
 whole-graph oracles in ``core/algorithms.py``:
 
-  * SSSP      — unit-weight shortest paths (paper Algorithm 1),
-  * WCC       — connected components via min-label epidemic (Algorithm 2;
-                labels are vertex ids so results are bit-identical to
-                ``reference_cc``),
-  * PageRank  — partial in-flow sums per partition, completed across the
-                cut each superstep (§III sketch).
+  * SSSP       — unit-weight shortest paths (paper Algorithm 1),
+  * WCC        — connected components via min-label epidemic (Algorithm 2;
+                 labels are vertex ids so results are bit-identical to
+                 ``reference_cc``),
+  * PageRank   — partial in-flow sums per partition, completed across the
+                 cut each superstep (§III sketch),
+  * wsssp      — weighted shortest paths over the plan's per-half-edge
+                 content-hash weights (``plan.edge_w``), via the
+                 ``EdgeProgram.edge`` hook,
+  * BFS        — hop levels with -1.0 marking unreachable vertices.
 
 Programs are module-level constants (static jit arguments); per-query
 values (source vertex, degree vector) travel in the traced ``ctx`` dict.
 ``multi_source_sssp`` vmaps one compiled superstep loop over a batch of
 sources — the serving-oriented batched-query path.
+
+Every program registers ONCE in ``engine.registry`` at the bottom of this
+module — through the same public ``registry.register`` call user programs
+use — and the serving stack (``repro.gserve``) derives request validation,
+batching, caching and dispatch from those entries.  The min-style programs
+also carry a ``warm_init`` hook: served queries can repair from a previous
+epoch's result after insert-only stream patches (old distances are valid
+upper bounds, so min-relaxation tightens them to the exact fixpoint in
+fewer supersteps than a cold recompute).
 """
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from ..core import algorithms as _alg
+from . import registry
 from .plan import PartitionPlan
 from .runtime import EdgeProgram, Engine, EngineResult
 
@@ -52,10 +69,25 @@ def _sssp_finalize(glob, present, plan, ctx):
     return jnp.where(present, glob, isolated)
 
 
+def _sssp_warm(plan, prev, ctx):
+    """Warm start from a previous epoch's [V] distances.
+
+    Valid whenever the graph changed by *insertions only* since ``prev``
+    was computed: old distances are then upper bounds on the true ones, and
+    min-relaxation from any upper bound converges to the exact fixpoint —
+    in as many supersteps as the *change* needs to propagate, not the whole
+    graph. +inf entries mean "no prior information" and reduce to the cold
+    init via the min below. (The serving layer tracks insert-only lineage
+    and never warm-starts across a deletion.)
+    """
+    local = jnp.where(plan.vmask, prev[plan.local2global], INF)
+    return jnp.minimum(_sssp_init(plan, ctx), local)
+
+
 SSSP = EdgeProgram(
     name="sssp", mode="replica", combine="min",
     prepare=_sssp_prepare, init=_sssp_init, pre=_sssp_pre, apply=_min_apply,
-    finalize=_sssp_finalize, local_fixpoint=True)
+    finalize=_sssp_finalize, local_fixpoint=True, warm_init=_sssp_warm)
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +155,60 @@ PAGERANK = EdgeProgram(
 
 
 # ---------------------------------------------------------------------------
+# Weighted SSSP — per-half-edge weights via the ``edge`` hook. The weights
+# are baked into the plan at compile/patch time (plan.edge_w, a content
+# hash of the endpoints — core/graph.py::edge_weights), so the weighted
+# message stream flows through the same segment-reduce kernels.
+# ---------------------------------------------------------------------------
+
+def _ident_pre(state, ctx):
+    return state
+
+
+def _wsssp_edge(msgs, plan, ctx):
+    return msgs + plan.edge_w
+
+
+WEIGHTED_SSSP = EdgeProgram(
+    name="wsssp", mode="replica", combine="min",
+    prepare=_sssp_prepare, init=_sssp_init, pre=_ident_pre,
+    apply=_min_apply, finalize=_sssp_finalize, local_fixpoint=True,
+    edge=_wsssp_edge, warm_init=_sssp_warm)
+
+
+# ---------------------------------------------------------------------------
+# BFS hop levels — unit costs through the ``edge`` hook; unreachable
+# vertices are finalized to -1.0 (distinguishing the *result space* from
+# the +inf-based relaxation state, which warm_init must map back).
+# ---------------------------------------------------------------------------
+
+def _bfs_edge(msgs, plan, ctx):
+    return msgs + 1.0
+
+
+def _bfs_finalize(glob, present, plan, ctx):
+    iota = jnp.arange(plan.n_vertices)
+    isolated = jnp.where(iota == ctx["source"], 0.0, INF)
+    d = jnp.where(present, glob, isolated)
+    return jnp.where(jnp.isinf(d), -1.0, d)
+
+
+def _bfs_warm(plan, prev, ctx):
+    # the finalized result marks unreachable as -1.0: back to +inf before
+    # reuse (a vertex unreachable pre-insert may be reachable now)
+    prev = jnp.where(prev < 0.0, INF, prev)
+    local = jnp.where(plan.vmask, prev[plan.local2global], INF)
+    return jnp.minimum(_sssp_init(plan, ctx), local)
+
+
+BFS = EdgeProgram(
+    name="bfs", mode="replica", combine="min",
+    prepare=_sssp_prepare, init=_sssp_init, pre=_ident_pre,
+    apply=_min_apply, finalize=_bfs_finalize, local_fixpoint=True,
+    edge=_bfs_edge, warm_init=_bfs_warm)
+
+
+# ---------------------------------------------------------------------------
 # Convenience entry points
 # ---------------------------------------------------------------------------
 
@@ -139,8 +225,63 @@ def engine_pagerank(engine: Engine, degrees: jax.Array,
     return engine.run(PAGERANK, max_supersteps=iters, degrees=degrees)
 
 
+def engine_weighted_sssp(engine: Engine, source: int) -> EngineResult:
+    return engine.run(WEIGHTED_SSSP, source=jnp.int32(source))
+
+
+def engine_bfs(engine: Engine, source: int) -> EngineResult:
+    return engine.run(BFS, source=jnp.int32(source))
+
+
 def multi_source_sssp(engine: Engine, sources) -> EngineResult:
     """Batched multi-source distances: one vmapped superstep loop answers
     every query; ``result.state`` is [S, V]."""
     sources = jnp.asarray(sources, jnp.int32)
     return engine.run_batched(SSSP, {"source": sources})
+
+
+# ---------------------------------------------------------------------------
+# Registry entries — the single declaration each program ever needs. The
+# whole serving stack (request validation, batch/cache keys, dispatch,
+# benchmark and test registration) derives from these; none of it names a
+# program again. User programs extend the system with exactly one more
+# ``registry.register`` call (see src/repro/engine/README.md).
+# ---------------------------------------------------------------------------
+
+def _non_negative(v):
+    if v < 0:
+        raise ValueError(f"iters must be >= 0, got {v}")
+
+
+registry.register(
+    "sssp", SSSP,
+    params=[registry.ParamSpec("source", int, batchable=True)],
+    oracle=lambda g, source: np.asarray(_alg.reference_sssp(g, source)[0]),
+)
+
+registry.register(
+    "wcc", WCC,
+    oracle=lambda g: np.asarray(_alg.reference_cc(g)[0]),
+)
+
+registry.register(
+    "pagerank", PAGERANK,
+    params=[registry.ParamSpec("iters", int, default=30, role="supersteps",
+                               validate=_non_negative)],
+    resources={"degrees": lambda g: g.degrees()},
+    oracle=lambda g, iters: np.asarray(_alg.reference_pagerank(g,
+                                                               iters=iters)),
+    oracle_atol=1e-5,
+)
+
+registry.register(
+    "wsssp", WEIGHTED_SSSP,
+    params=[registry.ParamSpec("source", int, batchable=True)],
+    oracle=_alg.reference_weighted_sssp,
+)
+
+registry.register(
+    "bfs", BFS,
+    params=[registry.ParamSpec("source", int, batchable=True)],
+    oracle=_alg.reference_bfs,
+)

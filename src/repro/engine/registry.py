@@ -1,0 +1,313 @@
+"""Declarative program registry — one source of truth from ``EdgeProgram``
+to ``GraphServer``.
+
+The paper's framework claim is that an edge-partitioned runtime is
+"flexible enough to be applied to several different graph problems"
+(§III).  Before this module the serving stack hardwired exactly three:
+the query layer duplicated the program list, carried per-kind request
+fields and branched on kind strings in its scheduler and server.  Now a
+program registers **once** with a declarative ``ParamSpec`` schema and
+everything downstream is *derived*:
+
+  * ``gserve.QueryRequest(kind, params={...})`` — validation, dtype
+    coercion and default normalisation (so e.g. ``iters=None`` and the
+    default 30 are the *same* query identity);
+  * scheduler ``batch_key`` — which requests may share one engine
+    dispatch (the single ``batchable`` param carries the micro-batch
+    axis; all other params must agree);
+  * epoch-cache ``cache_key`` — the identity of an answer within one
+    graph snapshot;
+  * server dispatch — batch-axis name/dtype, the superstep-count param
+    (``role="supersteps"``), and derived per-snapshot ``resources``
+    (e.g. PageRank's degree vector) all come from the entry;
+  * tests and benchmarks — ``oracle`` names the whole-graph reference
+    the program must reproduce (``oracle_atol`` its tolerance).
+
+Registering a new program therefore makes it servable end-to-end with
+zero serving-layer edits — see "Registering your own program" in
+src/repro/engine/README.md, with weighted SSSP as the worked example.
+All misuse raises the typed errors in ``engine.errors``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numbers
+from typing import Any, Callable, Mapping
+
+from .errors import (BatchAxisError, DuplicateProgramError, ParamTypeError,
+                     RegistryError, UnknownParamError, UnknownProgramError)
+
+_REQUIRED = object()        # sentinel: ParamSpec without a default
+_DTYPES = (int, float)
+_ROLES = ("ctx", "supersteps")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative schema for one per-query parameter.
+
+    dtype      — python scalar type (``int`` or ``float``); values are
+                 coerced (numpy scalars accepted, bools rejected for int).
+    default    — applied at request construction, so two spellings of the
+                 same logical query share batch/cache identity; omit to
+                 make the parameter required.
+    batchable  — this parameter may carry the micro-batch axis: the
+                 scheduler coalesces requests that differ only here into
+                 one vmapped dispatch.  At most one per program.
+    role       — "ctx": forwarded into the program's traced ``ctx`` via
+                 engine kwargs; "supersteps": consumed host-side as the
+                 superstep cap (``max_supersteps``).
+    validate   — optional callback run on the coerced value; raise
+                 ``ValueError`` to reject.
+    """
+    name: str
+    dtype: type = int
+    default: Any = _REQUIRED
+    batchable: bool = False
+    role: str = "ctx"
+    validate: Callable[[Any], None] | None = None
+
+    @property
+    def required(self) -> bool:
+        return self.default is _REQUIRED
+
+    def coerce(self, program: str, value: Any) -> Any:
+        """Validate + coerce one value; raises the typed errors."""
+        if isinstance(value, (list, tuple, set)) \
+                or getattr(value, "ndim", 0) > 0:
+            if self.batchable:
+                raise BatchAxisError(
+                    f"{program}.{self.name} is batchable, but one request "
+                    f"carries one scalar value (got {type(value).__name__}) "
+                    "— submit one request per value; the scheduler forms "
+                    "the batch axis by coalescing requests")
+            raise BatchAxisError(
+                f"{program}.{self.name} is not batchable and takes a "
+                f"scalar {self.dtype.__name__} (got "
+                f"{type(value).__name__}) — a batch axis may only ride on "
+                "the program's batchable parameter")
+        if self.dtype is int:
+            if isinstance(value, bool) \
+                    or not isinstance(value, numbers.Integral):
+                raise ParamTypeError(
+                    f"{program}.{self.name} expects int, got "
+                    f"{type(value).__name__} ({value!r})")
+            value = int(value)
+        else:  # float: accept any real number
+            if isinstance(value, bool) or not isinstance(value, numbers.Real):
+                raise ParamTypeError(
+                    f"{program}.{self.name} expects float, got "
+                    f"{type(value).__name__} ({value!r})")
+            value = float(value)
+        if self.validate is not None:
+            self.validate(value)
+        return value
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramEntry:
+    """One registered program: the EdgeProgram plus everything the query
+    layer derives (validation, batching, caching, dispatch, oracle)."""
+    name: str
+    program: Any                                # engine.runtime.EdgeProgram
+    params: tuple[ParamSpec, ...]
+    cacheable: bool = True                      # answers may enter the
+                                                #   epoch-keyed result cache
+    resources: tuple[tuple[str, Callable], ...] = ()
+                                                # engine-kw -> fn(graph),
+                                                #   derived per snapshot
+    oracle: Callable | None = None              # oracle(graph, **params)
+    oracle_atol: float = 0.0                    # 0.0 -> bit-identical
+
+    # -- schema accessors ----------------------------------------------------
+    @property
+    def batch_param(self) -> ParamSpec | None:
+        for p in self.params:
+            if p.batchable:
+                return p
+        return None
+
+    @property
+    def batchable(self) -> bool:
+        return self.batch_param is not None
+
+    def spec(self, name: str) -> ParamSpec:
+        for p in self.params:
+            if p.name == name:
+                return p
+        known = sorted(p.name for p in self.params) or ["<none>"]
+        raise UnknownParamError(
+            f"program {self.name!r} has no parameter {name!r}; "
+            f"declared: {', '.join(known)}")
+
+    # -- derivation ----------------------------------------------------------
+    def normalize(self, params: Mapping[str, Any] | None) -> dict[str, Any]:
+        """Coerce + default-fill a request's params. Normalisation at
+        construction makes param identity canonical: omitted-with-default
+        and explicitly-passed-default spell the SAME query (batch and
+        cache keys are derived from the normalized dict)."""
+        params = dict(params or {})
+        out: dict[str, Any] = {}
+        for spec in self.params:
+            if spec.name in params:
+                out[spec.name] = spec.coerce(self.name,
+                                             params.pop(spec.name))
+            elif spec.required:
+                raise ParamTypeError(
+                    f"program {self.name!r} requires parameter "
+                    f"{spec.name!r} ({spec.dtype.__name__}) and it has no "
+                    "default — pass it in params={...}")
+            else:
+                # coerced so a numpy-scalar default lands canonical, same
+                # as a caller-passed value (validated at registration too)
+                out[spec.name] = spec.coerce(self.name, spec.default)
+        if params:
+            bad = sorted(params)
+            known = sorted(p.name for p in self.params) or ["<none>"]
+            raise UnknownParamError(
+                f"program {self.name!r} has no parameter(s) "
+                f"{', '.join(map(repr, bad))}; declared: {', '.join(known)}")
+        return out
+
+    def supersteps_of(self, params: Mapping[str, Any]) -> int | None:
+        """The superstep cap for a dispatch (role="supersteps" param)."""
+        for p in self.params:
+            if p.role == "supersteps":
+                return int(params[p.name])
+        return None
+
+    def ctx_args(self, params: Mapping[str, Any]) -> dict[str, Any]:
+        """Non-batchable role="ctx" params, forwarded as engine kwargs."""
+        return {p.name: params[p.name] for p in self.params
+                if p.role == "ctx" and not p.batchable}
+
+    def batch_key_of(self, params: Mapping[str, Any]) -> tuple:
+        """Requests sharing a batch key may be answered by one dispatch:
+        same program, same value for every non-batchable parameter."""
+        return (self.name,) + tuple(
+            (p.name, params[p.name]) for p in self.params if not p.batchable)
+
+    def cache_key_of(self, params: Mapping[str, Any]) -> tuple:
+        """Identity of the *answer* within one graph snapshot: the program
+        plus every normalized parameter (tenant deliberately excluded —
+        result sharing across tenants is the point of the cache)."""
+        return (self.name,) + tuple(
+            (p.name, params[p.name]) for p in self.params)
+
+    def lane_cache_key(self, params: Mapping[str, Any], value: Any) -> tuple:
+        """Cache key of one lane of a micro-batch: the shared non-batch
+        params with the batch param set to this lane's value."""
+        bp = self.batch_param
+        if bp is None:
+            return self.cache_key_of(params)
+        return self.cache_key_of({**params, bp.name: value})
+
+
+class ProgramRegistry:
+    """Name -> ProgramEntry map with validated registration."""
+
+    def __init__(self):
+        self._entries: dict[str, ProgramEntry] = {}
+
+    def register(self, name: str, program, params=(), *,
+                 cacheable: bool = True,
+                 resources: Mapping[str, Callable] | None = None,
+                 oracle: Callable | None = None,
+                 oracle_atol: float = 0.0) -> ProgramEntry:
+        """Register one EdgeProgram under ``name``. Everything the query
+        layer needs is derived from this single call."""
+        if name in self._entries:
+            raise DuplicateProgramError(
+                f"program {name!r} is already registered — unregister it "
+                "first or register under a new name")
+        params = tuple(params)
+        seen: set[str] = set()
+        batchable = []
+        for p in params:
+            if not isinstance(p, ParamSpec):
+                raise RegistryError(
+                    f"program {name!r}: params must be ParamSpec instances, "
+                    f"got {type(p).__name__}")
+            if p.name in seen:
+                raise RegistryError(
+                    f"program {name!r}: duplicate parameter {p.name!r}")
+            seen.add(p.name)
+            if p.dtype not in _DTYPES:
+                raise RegistryError(
+                    f"program {name!r}: parameter {p.name!r} dtype must be "
+                    f"int or float, got {p.dtype!r}")
+            if p.role not in _ROLES:
+                raise RegistryError(
+                    f"program {name!r}: parameter {p.name!r} role must be "
+                    f"one of {_ROLES}, got {p.role!r}")
+            if p.batchable:
+                batchable.append(p)
+                if p.role != "ctx":
+                    raise RegistryError(
+                        f"program {name!r}: batchable parameter {p.name!r} "
+                        "must have role='ctx' (the superstep cap is a "
+                        "static jit argument and cannot carry a batch axis)")
+            if not p.required:
+                # defaults are injected into normalized params verbatim, so
+                # they must pass the same dtype/validate gauntlet as caller
+                # values — fail HERE, not deep inside a dispatch
+                try:
+                    p.coerce(name, p.default)
+                except RegistryError as e:
+                    raise RegistryError(
+                        f"program {name!r}: default for parameter "
+                        f"{p.name!r} is invalid: {e}") from e
+        if len(batchable) > 1:
+            names = ", ".join(p.name for p in batchable)
+            raise RegistryError(
+                f"program {name!r}: at most one batchable parameter is "
+                f"supported (the micro-batch axis), got: {names}")
+        entry = ProgramEntry(
+            name=name, program=program, params=params, cacheable=cacheable,
+            resources=tuple(sorted((resources or {}).items())),
+            oracle=oracle, oracle_atol=float(oracle_atol))
+        self._entries[name] = entry
+        return entry
+
+    def unregister(self, name: str) -> None:
+        self._entries.pop(name, None)
+
+    def get(self, name: str) -> ProgramEntry:
+        entry = self._entries.get(name)
+        if entry is None:
+            raise UnknownProgramError(
+                f"unknown program {name!r}; registered: "
+                f"{', '.join(sorted(self._entries)) or '<none>'}")
+        return entry
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def names(self) -> list[str]:
+        return sorted(self._entries)
+
+    def entries(self) -> list[ProgramEntry]:
+        return [self._entries[n] for n in self.names()]
+
+
+#: The process-wide registry every layer derives from. ``engine.programs``
+#: registers the built-ins on import; user programs register through the
+#: same public ``register`` call.
+DEFAULT_REGISTRY = ProgramRegistry()
+
+
+def register(name: str, program, params=(), **kwargs) -> ProgramEntry:
+    """Register into the default registry (the public extension point)."""
+    return DEFAULT_REGISTRY.register(name, program, params, **kwargs)
+
+
+def unregister(name: str) -> None:
+    DEFAULT_REGISTRY.unregister(name)
+
+
+def get_program(name: str) -> ProgramEntry:
+    return DEFAULT_REGISTRY.get(name)
+
+
+def program_names() -> list[str]:
+    return DEFAULT_REGISTRY.names()

@@ -47,6 +47,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import kernels
+from .errors import WarmStateError
 from .plan import PartitionPlan
 
 # Trace accounting: _run_loop's Python body executes only while jax traces
@@ -78,6 +79,18 @@ class EdgeProgram(NamedTuple):
     finalize: Callable              # (glob [V], present [V], plan, ctx) -> [V]
     local_fixpoint: bool = True
     default_supersteps: int | None = None   # None -> run to fixed point
+    # optional hooks (None: disabled)
+    edge: Callable | None = None    # (msgs [K, Emax], plan, ctx) -> msgs —
+                                    #   per-half-edge transform applied after
+                                    #   the neighbour gather, before the
+                                    #   segment reduce (e.g. + plan.edge_w)
+    warm_init: Callable | None = None
+                                    # (plan, prev [V], ctx) -> [K, Vmax] —
+                                    #   warm-start state from a previous
+                                    #   epoch's *finalized* result. +inf
+                                    #   entries of prev mean "no prior
+                                    #   information" and must reduce to the
+                                    #   cold init value for that vertex.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +155,8 @@ def _sweep(plan, prog, state, ctx, *, use_pallas: bool, interpret: bool):
     """One Gather-Apply sweep: returns the per-target aggregate [K, Vmax]."""
     pre = prog.pre(state, ctx)                              # [K, Vmax]
     msgs = pre[_rows(plan.edge_nbr), plan.edge_nbr]         # [K, Emax]
+    if prog.edge is not None:   # per-half-edge hook (weighted programs)
+        msgs = prog.edge(msgs, plan, ctx)
     if use_pallas:
         return kernels.segment_reduce(plan, msgs, prog.combine,
                                       interpret=interpret)
@@ -190,12 +205,20 @@ def _gather_global(plan, state, axis: str | None):
 
 
 def _run_loop(plan: PartitionPlan, prog: EdgeProgram, kw: dict,
-              axis: str | None, max_supersteps: int, max_local_iters: int,
-              use_pallas: bool, interpret: bool):
-    """The superstep loop (runs as-is on one device or inside shard_map)."""
+              prev: jax.Array | None, axis: str | None, max_supersteps: int,
+              max_local_iters: int, use_pallas: bool, interpret: bool):
+    """The superstep loop (runs as-is on one device or inside shard_map).
+
+    ``prev`` (None or a [V] previous-epoch result) selects cold vs warm
+    initialisation; None is pytree *structure*, so each variant is its own
+    jit cache entry and the branch below is resolved at trace time.
+    """
     TRACE_COUNTER["run_loop"] += 1
     ctx = prog.prepare(plan, kw)
-    state0 = prog.init(plan, ctx)
+    if prev is None:
+        state0 = prog.init(plan, ctx)
+    else:
+        state0 = prog.warm_init(plan, prev, ctx)
     opts = dict(use_pallas=use_pallas, interpret=interpret)
 
     if prog.mode == "replica":
@@ -247,38 +270,41 @@ def _run_loop(plan: PartitionPlan, prog: EdgeProgram, kw: dict,
 @partial(jax.jit, static_argnames=("prog", "max_supersteps",
                                    "max_local_iters", "use_pallas",
                                    "interpret"))
-def _run_single(plan, prog, kw, max_supersteps, max_local_iters,
+def _run_single(plan, prog, kw, prev, max_supersteps, max_local_iters,
                 use_pallas, interpret):
-    return _run_loop(plan, prog, kw, None, max_supersteps, max_local_iters,
-                     use_pallas, interpret)
+    return _run_loop(plan, prog, kw, prev, None, max_supersteps,
+                     max_local_iters, use_pallas, interpret)
 
 
 @partial(jax.jit, static_argnames=("prog", "mesh", "axis", "k_local",
                                    "max_supersteps", "max_local_iters",
                                    "interpret"))
-def _run_sharded(plan, kw, *, prog, mesh, axis, k_local, max_supersteps,
-                 max_local_iters, interpret):
+def _run_sharded(plan, kw, prev, *, prog, mesh, axis, k_local,
+                 max_supersteps, max_local_iters, interpret):
     """Module-level so repeated queries hit one jit cache entry per
     (program, mesh, shape) — the serving path never retraces."""
     plan_spec = jax.tree_util.tree_map(lambda _: P(axis), plan)
     kw_spec = jax.tree_util.tree_map(lambda _: P(), kw)
+    prev_spec = jax.tree_util.tree_map(lambda _: P(), prev)
 
-    def body(plan_local, kw_local):
+    def body(plan_local, kw_local, prev_local):
         plan_local = dataclasses.replace(plan_local, k=k_local)
-        return _run_loop(plan_local, prog, kw_local, axis,
+        return _run_loop(plan_local, prog, kw_local, prev_local, axis,
                          max_supersteps, max_local_iters,
                          use_pallas=False, interpret=interpret)
 
-    fn = shard_map(body, mesh=mesh, in_specs=(plan_spec, kw_spec),
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(plan_spec, kw_spec, prev_spec),
                    out_specs=(P(), P(), P(), P()), check_rep=False)
-    return fn(plan, kw)
+    return fn(plan, kw, prev)
 
 
 @partial(jax.jit, static_argnames=("prog", "mesh", "axis", "k_local",
                                    "max_supersteps", "max_local_iters",
                                    "interpret"))
-def _run_sharded_batched(plan, kw, batched_kw, *, prog, mesh, axis, k_local,
-                         max_supersteps, max_local_iters, interpret):
+def _run_sharded_batched(plan, kw, batched_kw, prev, *, prog, mesh, axis,
+                         k_local, max_supersteps, max_local_iters,
+                         interpret):
     """Batched queries on the shard_map path: partitions stay sharded over
     the mesh axis while the batch axis is vmapped *inside* the sharded body,
     so one superstep loop answers the whole micro-batch with the same
@@ -287,20 +313,24 @@ def _run_sharded_batched(plan, kw, batched_kw, *, prog, mesh, axis, k_local,
     plan_spec = jax.tree_util.tree_map(lambda _: P(axis), plan)
     kw_spec = jax.tree_util.tree_map(lambda _: P(), kw)
     bkw_spec = jax.tree_util.tree_map(lambda _: P(), batched_kw)
+    prev_spec = jax.tree_util.tree_map(lambda _: P(), prev)
 
-    def body(plan_local, kw_local, bkw_local):
+    def body(plan_local, kw_local, bkw_local, prev_local):
         plan_local = dataclasses.replace(plan_local, k=k_local)
 
-        def one(bkw):
-            return _run_loop(plan_local, prog, {**kw_local, **bkw}, axis,
-                             max_supersteps, max_local_iters,
+        def one(bkw, pv):
+            return _run_loop(plan_local, prog, {**kw_local, **bkw}, pv,
+                             axis, max_supersteps, max_local_iters,
                              use_pallas=False, interpret=interpret)
 
-        return jax.vmap(one)(bkw_local)
+        if prev_local is None:
+            return jax.vmap(lambda bkw: one(bkw, None))(bkw_local)
+        return jax.vmap(one)(bkw_local, prev_local)
 
-    fn = shard_map(body, mesh=mesh, in_specs=(plan_spec, kw_spec, bkw_spec),
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(plan_spec, kw_spec, bkw_spec, prev_spec),
                    out_specs=(P(), P(), P(), P()), check_rep=False)
-    return fn(plan, kw, batched_kw)
+    return fn(plan, kw, batched_kw, prev)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -324,17 +354,47 @@ class Engine:
         compaction ``epoch`` retraces."""
         return dataclasses.replace(self, plan=plan)
 
+    def _check_warm(self, prog: EdgeProgram, warm_state,
+                    batch: int | None) -> jax.Array | None:
+        """Validate a warm-start state (typed errors, actionable messages).
+
+        A warm state is a previous epoch's *finalized* [V] result (or a
+        [S, V] block for batched dispatch, one row per lane; +inf rows
+        mean "no prior information" and fall back to cold init).
+        """
+        if warm_state is None:
+            return None
+        if prog.warm_init is None:
+            raise WarmStateError(
+                f"program {prog.name!r} has no warm_init hook — pass "
+                "warm_init= when constructing the EdgeProgram to enable "
+                "warm-started dispatch, or drop warm_state")
+        prev = jnp.asarray(warm_state, jnp.float32)
+        want = (self.plan.n_vertices,) if batch is None \
+            else (batch, self.plan.n_vertices)
+        if prev.shape != want:
+            raise WarmStateError(
+                f"warm_state for program {prog.name!r} has shape "
+                f"{tuple(prev.shape)} but the plan serves "
+                f"{self.plan.n_vertices} vertices — expected {want} "
+                "(the previous epoch's finalized result state)")
+        return prev
+
     def dispatch(self, prog: EdgeProgram, max_supersteps: int | None = None,
-                 max_local_iters: int = 100_000, **kw: Any) -> PendingResult:
+                 max_local_iters: int = 100_000, warm_state=None,
+                 **kw: Any) -> PendingResult:
         """Non-blocking single-query dispatch: hands the superstep loop to
-        XLA and returns immediately. ``.result()`` syncs."""
+        XLA and returns immediately. ``.result()`` syncs. ``warm_state``
+        (a previous [V] result) initialises via ``prog.warm_init``."""
         steps = _steps(prog, max_supersteps)
+        prev = self._check_warm(prog, warm_state, None)
         kw = {k: jnp.asarray(v) for k, v in kw.items()}
         if self.mesh is None:
-            out = _run_single(self.plan, prog, kw, steps, max_local_iters,
-                              self.use_pallas, self.interpret)
+            out = _run_single(self.plan, prog, kw, prev, steps,
+                              max_local_iters, self.use_pallas,
+                              self.interpret)
         else:
-            out = _run_sharded(self._sharded_plan(), kw, prog=prog,
+            out = _run_sharded(self._sharded_plan(), kw, prev, prog=prog,
                                mesh=self.mesh, axis=self.axis,
                                k_local=self._k_local(),
                                max_supersteps=steps,
@@ -343,13 +403,14 @@ class Engine:
         return PendingResult(out, self.plan.exchange_volume)
 
     def run(self, prog: EdgeProgram, max_supersteps: int | None = None,
-            max_local_iters: int = 100_000, **kw: Any) -> EngineResult:
+            max_local_iters: int = 100_000, warm_state=None,
+            **kw: Any) -> EngineResult:
         return self.dispatch(prog, max_supersteps, max_local_iters,
-                             **kw).result()
+                             warm_state=warm_state, **kw).result()
 
     def dispatch_batched(self, prog: EdgeProgram, batched_kw: dict,
                          max_supersteps: int | None = None,
-                         max_local_iters: int = 100_000,
+                         max_local_iters: int = 100_000, warm_state=None,
                          **kw: Any) -> PendingResult:
         """Non-blocking micro-batch dispatch: vmap the superstep loop over a
         batch axis of ``batched_kw`` (e.g. ``{"source": sources}`` for
@@ -357,19 +418,32 @@ class Engine:
         the batch axis vmapped inside the shard_map body. The XLA
         segment-reduce path is used (vmapping the interpreted Pallas grid is
         unsupported). The serving scheduler dispatches the next micro-batch
-        while this one computes and syncs via ``.result()``."""
+        while this one computes and syncs via ``.result()``.
+        ``warm_state`` is a [S, V] block, one previous-result row per lane
+        (+inf rows cold-start their lane)."""
         steps = _steps(prog, max_supersteps)
         kw = {k: jnp.asarray(v) for k, v in kw.items()}
         batched_kw = {k: jnp.asarray(v) for k, v in batched_kw.items()}
+        n_batch = next(iter(batched_kw.values())).shape[0]
+        prev = self._check_warm(prog, warm_state, n_batch)
         if self.mesh is None:
-            def one(bkw):
-                return _run_single(self.plan, prog, {**kw, **bkw}, steps,
-                                   max_local_iters, False, self.interpret)
+            if prev is None:
+                def one(bkw):
+                    return _run_single(self.plan, prog, {**kw, **bkw}, None,
+                                       steps, max_local_iters, False,
+                                       self.interpret)
 
-            out = jax.vmap(one)(batched_kw)
+                out = jax.vmap(one)(batched_kw)
+            else:
+                def one_warm(bkw, pv):
+                    return _run_single(self.plan, prog, {**kw, **bkw}, pv,
+                                       steps, max_local_iters, False,
+                                       self.interpret)
+
+                out = jax.vmap(one_warm)(batched_kw, prev)
         else:
             out = _run_sharded_batched(self._sharded_plan(), kw, batched_kw,
-                                       prog=prog, mesh=self.mesh,
+                                       prev, prog=prog, mesh=self.mesh,
                                        axis=self.axis,
                                        k_local=self._k_local(),
                                        max_supersteps=steps,
@@ -379,10 +453,11 @@ class Engine:
 
     def run_batched(self, prog: EdgeProgram, batched_kw: dict,
                     max_supersteps: int | None = None,
-                    max_local_iters: int = 100_000,
+                    max_local_iters: int = 100_000, warm_state=None,
                     **kw: Any) -> EngineResult:
         return self.dispatch_batched(prog, batched_kw, max_supersteps,
-                                     max_local_iters, **kw).result()
+                                     max_local_iters, warm_state=warm_state,
+                                     **kw).result()
 
     # -- shard_map plumbing -------------------------------------------------
     def _k_local(self) -> int:

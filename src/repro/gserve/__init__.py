@@ -1,21 +1,26 @@
 """repro.gserve — graph query serving subsystem.
 
 Micro-batched multi-tenant serving over the partitioned execution engine:
-typed query requests (SSSP / WCC / PageRank) are coalesced into fixed-shape
-micro-batches (pad-to-bucket keeps jit caches warm), answered through the
-plan-cache-backed engine with an epoch-keyed result cache, and kept
-consistent under live ``repro.stream`` updates by a double-buffered plan
-swap.  See src/repro/gserve/README.md for the design note.
+typed query requests name any program registered in the engine's
+``ProgramRegistry`` (``QueryRequest(kind, params={...})``); validation,
+batching, caching and dispatch are all *derived* from the registry entry,
+so registering a new program makes it servable with zero edits here.
+Requests are coalesced into fixed-shape micro-batches (pad-to-bucket keeps
+jit caches warm; a timer-based flush bounds tail latency at low load),
+admitted under per-tenant fair shares, answered through the
+plan-cache-backed engine with an epoch-keyed result cache plus
+warm-started repair across insert-only stream patches, and kept consistent
+under live ``repro.stream`` updates by a double-buffered plan swap.  See
+src/repro/gserve/README.md for the design note.
 """
 from .cache import ResultCache
 from .metrics import ServeMetrics, percentile
-from .request import (AdmissionError, QUERY_KINDS, QueryRequest, QueryResult,
-                      QuerySpec)
+from .request import AdmissionError, QueryRequest, QueryResult
 from .scheduler import DEFAULT_BUCKETS, MicroBatch, MicroBatcher, bucket_for
 from .server import GraphServer
 
 __all__ = [
     "AdmissionError", "DEFAULT_BUCKETS", "GraphServer", "MicroBatch",
-    "MicroBatcher", "QUERY_KINDS", "QueryRequest", "QueryResult",
-    "QuerySpec", "ResultCache", "ServeMetrics", "bucket_for", "percentile",
+    "MicroBatcher", "QueryRequest", "QueryResult", "ResultCache",
+    "ServeMetrics", "bucket_for", "percentile",
 ]

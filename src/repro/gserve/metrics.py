@@ -31,10 +31,12 @@ class ServeMetrics:
         self.latencies: list[float] = []
         self.n_completed = 0
         self.n_rejected = 0
+        self.n_rejected_fair_share = 0  # subset of rejections: tenant cap
         self.n_cache_hits = 0
         self.n_batches = 0
         self.n_lanes_dispatched = 0    # padded lanes (bucket sizes summed)
         self.n_lanes_used = 0          # deduped real parameters
+        self.n_lanes_warm = 0          # lanes warm-started from a prior epoch
         self.n_requests_batched = 0    # requests answered by engine runs
         self.n_swaps = 0               # plan-buffer swaps observed
         self.t0 = time.time()
@@ -46,14 +48,18 @@ class ServeMetrics:
         if from_cache:
             self.n_cache_hits += 1
 
-    def record_batch(self, n_requests: int, n_lanes: int, bucket: int) -> None:
+    def record_batch(self, n_requests: int, n_lanes: int, bucket: int,
+                     warm_lanes: int = 0) -> None:
         self.n_batches += 1
         self.n_requests_batched += n_requests
         self.n_lanes_used += n_lanes
         self.n_lanes_dispatched += bucket
+        self.n_lanes_warm += warm_lanes
 
-    def record_rejection(self) -> None:
+    def record_rejection(self, fair_share: bool = False) -> None:
         self.n_rejected += 1
+        if fair_share:
+            self.n_rejected_fair_share += 1
 
     def record_swap(self) -> None:
         self.n_swaps += 1
@@ -68,6 +74,8 @@ class ServeMetrics:
         return {
             "completed": self.n_completed,
             "rejected": self.n_rejected,
+            "rejected_fair_share": self.n_rejected_fair_share,
+            "warm_started_lanes": self.n_lanes_warm,
             "qps": round(self.n_completed / wall, 2),
             "latency_p50_s": round(percentile(self.latencies, 50), 6),
             "latency_p99_s": round(percentile(self.latencies, 99), 6),

@@ -8,21 +8,32 @@ configured bucket >= S (repeating the last parameter — the duplicate lanes
 compute a result that is simply dropped), so after one warm-up pass per
 bucket every future micro-batch of any size hits a warm cache.
 
-Coalescing rules (request.batch_key):
+Coalescing rules (request.batch_key — derived from the program registry):
 
-  * batchable kinds (SSSP) — up to ``max(buckets)`` requests per dispatch,
-    duplicate parameters deduped into one lane and fanned back out;
-  * parameterless kinds (WCC, PageRank-with-same-iters) — ANY number of
+  * programs with a batchable parameter (SSSP, weighted SSSP, BFS, ...) —
+    up to ``max(buckets)`` requests per dispatch, duplicate parameters
+    deduped into one lane and fanned back out;
+  * programs without one (WCC, PageRank-with-same-iters) — ANY number of
     concurrent requests collapse into ONE engine run shared by every
     requesting tenant.
 
 Queues are FIFO per batch key and keys are drained in arrival order of
 their oldest request, so no tenant's query class can starve another's.
+
+Timer-based flush: ``next_batch(max_wait_s=...)`` *defers* a batchable key
+that cannot yet fill the largest bucket — until its oldest request has
+waited ``max_wait_s``, at which point the partial bucket dispatches
+anyway.  That bounds p99 latency at low offered load while still giving
+bursts time to coalesce (``GraphServer.drain`` drives the ticks).
+
+The batcher also tracks per-tenant pending counts — the server's
+fair-share admission control reads them at the door.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 
 from .request import QueryRequest
 
@@ -66,13 +77,22 @@ class MicroBatcher:
     def __init__(self, buckets: tuple[int, ...] = DEFAULT_BUCKETS):
         assert buckets == tuple(sorted(buckets)) and len(buckets) >= 1
         self.buckets = tuple(int(b) for b in buckets)
+        # each queue holds (request, arrival_time) pairs
         self._queues: "collections.OrderedDict[tuple, collections.deque]" = \
             collections.OrderedDict()
         self._arrival = 0
         self._order: dict[tuple, int] = {}   # key -> oldest arrival seq
+        self._tenant = collections.Counter()  # tenant -> pending requests
 
     def __len__(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    # -- fair-share accounting (read by GraphServer.submit) ------------------
+    def tenant_pending(self, tenant: str) -> int:
+        return self._tenant.get(tenant, 0)
+
+    def active_tenants(self) -> set[str]:
+        return {t for t, n in self._tenant.items() if n > 0}
 
     def add(self, req: QueryRequest) -> None:
         key = req.batch_key()
@@ -81,31 +101,60 @@ class MicroBatcher:
             q = self._queues[key] = collections.deque()
         if not q:
             self._order[key] = self._arrival
-        q.append(req)
+        q.append((req, time.time()))
+        self._tenant[req.tenant] += 1
         self._arrival += 1
 
-    def _oldest_key(self) -> tuple | None:
+    def _live_keys(self) -> list[tuple]:
+        """Keys with queued requests, oldest head first."""
         live = [(seq, key) for key, seq in self._order.items()
                 if self._queues.get(key)]
-        return min(live)[1] if live else None
+        return [key for _, key in sorted(live)]
 
-    def next_batch(self) -> MicroBatch | None:
-        """Form one micro-batch from the queue whose head arrived first."""
-        key = self._oldest_key()
-        if key is None:
+    def next_batch(self, now: float | None = None,
+                   max_wait_s: float | None = None) -> MicroBatch | None:
+        """Form one micro-batch from the first *ready* queue in arrival
+        order of queue heads.
+
+        Without a timer every non-empty queue is ready (greedy draining,
+        the default).  With ``max_wait_s`` set, a batchable queue that
+        cannot fill the largest bucket is deferred until its head request
+        has waited the deadline out — the timer-based flush that bounds
+        tail latency at low offered load.  Non-batchable queues dispatch
+        immediately (all queued requests share one run regardless).
+        """
+        for key in self._live_keys():
+            q = self._queues[key]
+            head, t_head = q[0]
+            if (max_wait_s is not None and head.entry.batchable
+                    and len(q) < self.buckets[-1]
+                    and (now if now is not None else time.time()) - t_head
+                    < max_wait_s):
+                continue                     # let the bucket fill
+            return self._form(key)
+        return None
+
+    def oldest_wait(self, now: float | None = None) -> float | None:
+        """Age of the oldest pending request (None when empty) — lets the
+        drain loop sleep until the next deadline instead of busy-polling."""
+        heads = [self._queues[k][0][1] for k in self._live_keys()]
+        if not heads:
             return None
+        return (now if now is not None else time.time()) - min(heads)
+
+    def _form(self, key: tuple) -> MicroBatch:
         q = self._queues[key]
-        head = q[0]
-        if head.spec.batchable:
+        head, _ = q[0]
+        if head.entry.batchable:
             take = min(len(q), self.buckets[-1])
-            reqs = tuple(q.popleft() for _ in range(take))
+            reqs = tuple(q.popleft()[0] for _ in range(take))
             # dedupe identical parameters into one lane
             params: list = []
             lane: list[int] = []
             seen: dict = {}
-            pname = head.spec.param
+            pname = head.entry.batch_param.name
             for r in reqs:
-                p = getattr(r, pname)
+                p = r.params[pname]
                 if p not in seen:
                     seen[p] = len(params)
                     params.append(p)
@@ -114,8 +163,12 @@ class MicroBatcher:
             batch = MicroBatch(key, reqs, tuple(params), tuple(lane), bucket)
         else:
             # parameterless: every queued request shares one run
-            reqs = tuple(q.popleft() for _ in range(len(q)))
+            reqs = tuple(q.popleft()[0] for _ in range(len(q)))
             batch = MicroBatch(key, reqs, None, None, 1)
+        for r in reqs:
+            self._tenant[r.tenant] -= 1
+            if self._tenant[r.tenant] <= 0:
+                del self._tenant[r.tenant]
         if not q:
             self._order.pop(key, None)
         return batch

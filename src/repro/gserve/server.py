@@ -1,26 +1,40 @@
 """GraphServer — micro-batched multi-tenant serving over the engine.
 
-The server pulls four pieces together:
+The server pulls five pieces together:
 
+  * the engine's ``ProgramRegistry``: every servable program declared its
+    schema once, and the server *derives* dispatch from the entry — the
+    batch-axis name/dtype, the superstep-count parameter, derived
+    per-snapshot resources (e.g. PageRank's degree vector), cacheability.
+    No program is named anywhere in this package; registering a new
+    program makes it servable with zero edits here;
   * a ``MicroBatcher`` (scheduler.py) that coalesces compatible requests
     from many tenants into fixed-shape micro-batches (pad-to-bucket keeps
-    the engine's jit caches warm across arbitrary offered loads);
+    the engine's jit caches warm), with per-tenant pending counts feeding
+    fair-share admission and a timer-based flush bounding tail latency at
+    low offered load;
   * the partitioned engine's non-blocking dispatch: ``drain()`` is software
     pipelined — micro-batch i+1 is formed and handed to XLA while batch i's
-    device arrays are still settling (``PendingResult``), so batch-formation
-    overhead hides under device execution;
+    device arrays are still settling (``PendingResult``);
   * an epoch-keyed ``ResultCache`` (cache.py) keyed by graph content
     fingerprint — tenants share answers, and every plan swap drops stale
-    entries;
+    entries.  Alongside it, a *warm-start store* keeps the last computed
+    result per query key together with the fingerprint it was computed at:
+    when the graph has only gained edges since (insert-only lineage,
+    tracked via ``StreamSession.last_change``), a new dispatch of the same
+    query warm-starts from the old result through the program's
+    ``warm_init`` hook — repairing e.g. SSSP distances in one or two
+    supersteps instead of recomputing from scratch;
   * a *double-buffered plan swap*: the server holds one immutable
     ``_PlanBuffer`` (engine + graph snapshot + fingerprint + version).  A
-    ``repro.stream`` session publishes epoch-change hooks; on each event the
-    server builds a fresh buffer and atomically swaps the front pointer.
-    In-flight micro-batches captured the OLD buffer at dispatch time and
-    keep draining against it (plans are immutable pytrees — there is no
-    torn/half-patched state to observe); batches formed after the swap see
-    the new one.  Every result is stamped with the buffer it was served
-    from, so callers can check consistency against that exact snapshot.
+    ``repro.stream`` session publishes epoch-change hooks; on each event
+    the server builds a fresh buffer and atomically swaps the front
+    pointer.  In-flight micro-batches captured the OLD buffer at dispatch
+    time and keep draining against it (plans are immutable pytrees — there
+    is no torn/half-patched state to observe); batches formed after the
+    swap see the new one.  Every result is stamped with the buffer it was
+    served from, so callers can check consistency against that exact
+    snapshot.
 """
 from __future__ import annotations
 
@@ -33,13 +47,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.graph import Graph
-from ..engine import programs
+from ..engine.registry import ProgramEntry
 from ..engine.runtime import Engine, PendingResult
 from .cache import ResultCache
 from .metrics import ServeMetrics
 from .request import AdmissionError, QueryRequest, QueryResult
 from .scheduler import (DEFAULT_BUCKETS, MicroBatch, MicroBatcher,
                         bucket_for, pad_params)
+
+_BATCH_DTYPES = {int: jnp.int32, float: jnp.float32}
 
 
 def _frozen(a: np.ndarray) -> np.ndarray:
@@ -68,12 +84,17 @@ class _PlanBuffer:
             object.__setattr__(self, "_fingerprint", cached)
         return cached
 
-    def degrees(self) -> jnp.ndarray:
-        cached = self.__dict__.get("_degrees")
-        if cached is None:
-            cached = self.graph.degrees()
-            object.__setattr__(self, "_degrees", cached)
-        return cached
+    def resource(self, name: str, fn) -> object:
+        """Memoized registry-declared resources (e.g. pagerank's degree
+        vector), derived from the graph snapshot on first use and shared
+        by every micro-batch served from this buffer."""
+        cache = self.__dict__.get("_resources")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_resources", cache)
+        if name not in cache:
+            cache[name] = fn(self.graph)
+        return cache[name]
 
 
 @dataclasses.dataclass
@@ -87,6 +108,10 @@ class _InFlight:
     n_lanes: int                      # deduped uncached lanes dispatched
     bucket: int                       # padded dispatch shape (0: no dispatch)
     t_dispatch: float
+    warm_lanes: frozenset = frozenset()
+                                      # dispatched lane indices that warm-
+                                      #   started from a prior epoch's
+                                      #   result (others ran cold +inf rows)
 
 
 class GraphServer:
@@ -101,16 +126,23 @@ class GraphServer:
     double-buffering plan swaps under queries)::
 
         server = GraphServer.from_session(sess)
+
+    ``max_wait_s`` (optional) arms the timer-based flush: ``drain()`` then
+    lets partial buckets wait up to the deadline for more requests to
+    coalesce before dispatching.  ``warm_entries=0`` disables warm-started
+    repair dispatch.
     """
 
     def __init__(self, engine: Engine, graph: Graph, *,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  max_pending: int = 1024, cache_entries: int = 512,
-                 use_pallas: bool = False,
+                 use_pallas: bool = False, max_wait_s: float | None = None,
+                 warm_entries: int = 256,
                  epoch: int = 0, version: int = 0):
         self.buckets = tuple(buckets)
         self.max_pending = int(max_pending)
         self.use_pallas = bool(use_pallas)
+        self.max_wait_s = max_wait_s
         self.metrics = ServeMetrics()
         self.cache = ResultCache(cache_entries)
         self._batcher = MicroBatcher(self.buckets)
@@ -121,6 +153,14 @@ class GraphServer:
         self._results: "collections.OrderedDict[int, QueryResult]" = \
             collections.OrderedDict()
         self._results_max = max(4 * self.max_pending, 4096)
+        # warm-start store: cache_key -> (fingerprint, value). Entries
+        # outlive plan swaps (that is their point); validity is decided at
+        # dispatch time against _warm_ok, the set of fingerprints connected
+        # to the front buffer by insert-only content changes.
+        self._warm_max = int(warm_entries)
+        self._warm: "collections.OrderedDict[tuple, tuple[str, np.ndarray]]"\
+            = collections.OrderedDict()
+        self._warm_ok: set[str] = set()
         self._session = None
         self._unsubscribe = None
         self._cache_dirty = False
@@ -159,12 +199,34 @@ class GraphServer:
         hashing the edge set on the stream's update hot path would tax
         updates that no query ever observes; the purge runs on the next
         cache access instead (stale entries are unreachable in between:
-        every probe is keyed by the captured buffer's fingerprint)."""
+        every probe is keyed by the captured buffer's fingerprint).
+
+        Warm-start lineage: an insert-only (or content-neutral) change
+        keeps previous results valid as relaxation upper bounds, so the
+        outgoing buffer's fingerprint joins ``_warm_ok``; any deletion
+        breaks the chain and clears the warm store wholesale."""
         buf = self._make_buffer(session.engine, session.graph(),
                                 session.epoch, session.version)
+        delta = getattr(session, "last_change", {}).get("content_delta",
+                                                        "mixed")
         with self._lock:
+            old = self._front
             self._front = buf
             self._cache_dirty = True
+            if delta in ("none", "insert_only"):
+                # only a *queried* buffer memoized its fingerprint; an
+                # unqueried one has no warm entries keyed to it either
+                old_fp = old.__dict__.get("_fingerprint")
+                if old_fp is not None:
+                    # prune lineage for fingerprints no warm entry holds
+                    # any more (LRU-evicted): bounds _warm_ok at
+                    # warm_entries + 1 on append-only streams
+                    live = {fp for fp, _ in self._warm.values()}
+                    self._warm_ok &= live
+                    self._warm_ok.add(old_fp)
+            else:
+                self._warm_ok.clear()
+                self._warm.clear()
             self.metrics.record_swap()
 
     def _maybe_invalidate_cache(self) -> None:
@@ -181,14 +243,38 @@ class GraphServer:
 
     # -- request intake ------------------------------------------------------
     def submit(self, req: QueryRequest) -> int:
-        """Enqueue one request; returns its id. Admission control: raises
-        ``AdmissionError`` when ``max_pending`` requests are already
-        queued — shed load at the door rather than queue without bound."""
+        """Enqueue one request; returns its id.
+
+        Admission control sheds load at the door rather than queue without
+        bound, with a per-tenant fair share: a tenant may hold at most
+        ``max_pending // active_tenants`` pending requests (active = has
+        pending requests, counting the submitter).  A tenant with nothing
+        pending is always allowed its first request even when the queue is
+        globally full — so one tenant saturating the queue can never lock
+        a quiet tenant out entirely.  The exemption is itself bounded:
+        total pending never exceeds ``2 * max_pending``, so a flood of
+        fresh tenant ids cannot defeat load shedding."""
         with self._lock:
-            if len(self._batcher) >= self.max_pending:
+            n_active = len(self._batcher.active_tenants() | {req.tenant})
+            share = max(1, self.max_pending // n_active)
+            mine = self._batcher.tenant_pending(req.tenant)
+            total = len(self._batcher)
+            if mine >= share:
+                self.metrics.record_rejection(fair_share=n_active > 1)
+                raise AdmissionError(
+                    f"tenant {req.tenant!r} holds {mine} pending requests "
+                    f">= its fair share ({share} = {self.max_pending} / "
+                    f"{n_active} active tenants)")
+            if total >= self.max_pending and mine > 0:
                 self.metrics.record_rejection()
                 raise AdmissionError(
                     f"pending queue full ({self.max_pending})")
+            if total >= 2 * self.max_pending:
+                # hard wall: even the first-request exemption sheds load
+                # once fresh-tenant overshoot doubles the queue
+                self.metrics.record_rejection()
+                raise AdmissionError(
+                    f"pending queue at hard limit ({2 * self.max_pending})")
             self._t_submit[req.id] = time.time()
             self._batcher.add(req)
             return req.id
@@ -198,47 +284,106 @@ class GraphServer:
             return len(self._batcher)
 
     # -- micro-batch execution ----------------------------------------------
+    def _warm_block(self, entry: ProgramEntry, params0: dict,
+                    padded_params: tuple, buffer: _PlanBuffer
+                    ) -> tuple[np.ndarray | None, frozenset]:
+        """([bucket, V] warm-start block or None, warm lane indices) for a
+        batchable dispatch.
+
+        Lane i warm-starts from the stored result for the same query key
+        when that result's snapshot is an insert-only ancestor of the
+        buffer being dispatched against; lanes without one get +inf rows
+        ("no prior information" — the warm_init contract cold-starts them)
+        and are NOT in the returned index set. Call with the lock held."""
+        if entry.program.warm_init is None or self._warm_max <= 0 \
+                or not self._warm:
+            return None, frozenset()
+        fp_front = buffer.fingerprint()
+        rows: list[np.ndarray | None] = []
+        warm_lanes = set()
+        for li, p in enumerate(padded_params):
+            got = self._warm.get(entry.lane_cache_key(params0, p))
+            if got is not None and (got[0] in self._warm_ok
+                                    or got[0] == fp_front):
+                rows.append(got[1])
+                warm_lanes.add(li)
+            else:
+                rows.append(None)
+        if not warm_lanes:
+            return None, frozenset()
+        cold = np.full(buffer.graph.n_vertices, np.inf, np.float32)
+        return (np.stack([r if r is not None else cold for r in rows]),
+                frozenset(warm_lanes))
+
+    def _store_warm(self, entry: ProgramEntry, key: tuple, fp: str,
+                    value: np.ndarray) -> None:
+        """Remember the latest computed result per query key (lock held)."""
+        if entry.program.warm_init is None or self._warm_max <= 0:
+            return
+        self._warm[key] = (fp, value)
+        self._warm.move_to_end(key)
+        while len(self._warm) > self._warm_max:
+            self._warm.popitem(last=False)
+
     def _dispatch_batch(self, batch: MicroBatch,
                         buffer: _PlanBuffer) -> _InFlight:
-        """Hand one micro-batch to the engine without syncing. Cache lookups
-        happen here, at *serve* time, against the captured buffer's
+        """Hand one micro-batch to the engine without syncing — entirely
+        derived from the program's registry entry (batch axis, superstep
+        cap, snapshot resources): no program is named here. Cache lookups
+        happen at *serve* time, against the captured buffer's
         fingerprint — a request submitted before a plan swap but batched
         after it is answered (and labelled) with the post-swap snapshot."""
-        kind = batch.key[0]
+        req0 = batch.requests[0]
+        entry = req0.entry
+        params0 = req0.params
         eng = buffer.engine
+        steps = entry.supersteps_of(params0)
+        kw = {name: buffer.resource(name, fn) for name, fn in entry.resources}
+        kw.update(entry.ctx_args(params0))
         cached: dict[int, np.ndarray] = {}
         lane_of: dict[int, int] = {}
         pending = None
         n_lanes = 0
         bucket = 0
+        warm_lanes: frozenset = frozenset()
 
-        if batch.params is not None:                    # batchable (sssp)
+        if batch.params is not None:            # batchable program
             # per-lane cache probe, then dispatch only the uncached lanes
             lane_val: dict[int, np.ndarray] = {}
             uncached: list[int] = []
+            warm_state = None
             with self._lock:
                 self._maybe_invalidate_cache()
                 for li, p in enumerate(batch.params):
-                    hit = self.cache.get(buffer.fingerprint(), (kind, int(p)))
+                    hit = self.cache.get(buffer.fingerprint(),
+                                         entry.lane_cache_key(params0, p))
                     if hit is not None:
                         lane_val[li] = hit
                     else:
                         uncached.append(li)
+                if uncached:
+                    n_lanes = len(uncached)
+                    bucket = bucket_for(n_lanes, self.buckets)
+                    params = pad_params(tuple(batch.params[li]
+                                              for li in uncached), bucket)
+                    warm_state, warm_lanes = self._warm_block(
+                        entry, params0, params, buffer)
             for r, li in zip(batch.requests, batch.lane):
                 if li in lane_val:
                     cached[r.id] = lane_val[li]
                 else:
                     lane_of[r.id] = uncached.index(li)
             if uncached:
-                n_lanes = len(uncached)
-                bucket = bucket_for(n_lanes, self.buckets)
-                params = pad_params(tuple(batch.params[li]
-                                          for li in uncached), bucket)
+                # pad duplicates beyond the real lanes don't serve anyone
+                warm_lanes = frozenset(li for li in warm_lanes
+                                       if li < n_lanes)
+                bp = entry.batch_param
                 pending = eng.dispatch_batched(
-                    programs.SSSP,
-                    {"source": jnp.asarray(params, jnp.int32)})
-        else:                                           # one shared run
-            key = batch.requests[0].cache_key()
+                    entry.program,
+                    {bp.name: jnp.asarray(params, _BATCH_DTYPES[bp.dtype])},
+                    max_supersteps=steps, warm_state=warm_state, **kw)
+        else:                                   # one shared run
+            key = req0.cache_key()
             with self._lock:
                 self._maybe_invalidate_cache()
                 hit = self.cache.get(buffer.fingerprint(), key)
@@ -247,31 +392,23 @@ class GraphServer:
                     cached[r.id] = hit
             else:
                 n_lanes = bucket = 1
-                if kind == "wcc":
-                    pending = eng.dispatch(programs.WCC)
-                elif kind == "pagerank":
-                    iters = batch.requests[0].iters
-                    pending = eng.dispatch(
-                        programs.PAGERANK,
-                        max_supersteps=iters,
-                        degrees=buffer.degrees())
-                else:
-                    raise ValueError(f"unserveable kind {kind!r}")
+                pending = eng.dispatch(entry.program, max_supersteps=steps,
+                                       **kw)
         if pending is not None:
             self.metrics.record_batch(len(batch.requests) - len(cached),
-                                      n_lanes, bucket)
+                                      n_lanes, bucket, len(warm_lanes))
         return _InFlight(batch, buffer, pending, lane_of, cached,
-                         n_lanes, bucket, time.time())
+                         n_lanes, bucket, time.time(), warm_lanes)
 
     def _complete(self, fl: _InFlight) -> list[QueryResult]:
         """Sync one in-flight batch and materialise per-request results."""
         values: dict[int, np.ndarray] = dict(fl.cached)
         supersteps: dict[int, int] = {}
+        entry = fl.batch.requests[0].entry
         if fl.pending is not None:
             res = fl.pending.result()
             state = np.asarray(res.state)
             ss = np.asarray(res.supersteps).reshape(-1)
-            kind = fl.batch.key[0]
             if fl.batch.params is not None:
                 # fan dispatched lanes back out + fill the cache; copy each
                 # lane so neither results nor cache entries pin the whole
@@ -282,25 +419,29 @@ class GraphServer:
                     values[rid] = lane_arr[dl]
                     supersteps[rid] = int(ss[min(dl, len(ss) - 1)])
                 with self._lock:
-                    # only fill the cache if no swap landed mid-flight: a
-                    # put keyed by a dead fingerprint would re-insert a
-                    # stale entry the deferred invalidation already (or
-                    # will never) see
-                    if (not self._cache_dirty and fl.buffer.fingerprint()
-                            == self._front.fingerprint()):
-                        for rid, dl in fl.lane_of.items():
-                            req = next(r for r in fl.batch.requests
-                                       if r.id == rid)
-                            if req.spec.cacheable:
-                                self.cache.put(fl.buffer.fingerprint(),
-                                               req.cache_key(),
-                                               lane_arr[dl])
+                    # the warm store keeps every computed result (validity
+                    # is re-derived at use time from its fingerprint), but
+                    # only fill the result cache if no swap landed
+                    # mid-flight: a put keyed by a dead fingerprint would
+                    # re-insert a stale entry the deferred invalidation
+                    # already (or will never) see
+                    fp = fl.buffer.fingerprint()
+                    fresh = (not self._cache_dirty
+                             and fp == self._front.fingerprint())
+                    for rid, dl in fl.lane_of.items():
+                        req = next(r for r in fl.batch.requests
+                                   if r.id == rid)
+                        self._store_warm(entry, req.cache_key(), fp,
+                                         lane_arr[dl])
+                        if fresh and entry.cacheable:
+                            self.cache.put(fp, req.cache_key(),
+                                           lane_arr[dl])
             else:
                 state = _frozen(state)
                 for r in fl.batch.requests:
                     values[r.id] = state
                     supersteps[r.id] = int(ss.max())
-                if fl.batch.requests[0].spec.cacheable:
+                if entry.cacheable:
                     with self._lock:
                         if (not self._cache_dirty
                                 and fl.buffer.fingerprint()
@@ -320,7 +461,8 @@ class GraphServer:
                     supersteps=supersteps.get(r.id, 0),
                     from_cache=r.id in fl.cached,
                     batch_size=len(fl.batch.requests), bucket=fl.bucket,
-                    latency_s=now - t0)
+                    latency_s=now - t0,
+                    warm_start=fl.lane_of.get(r.id, -1) in fl.warm_lanes)
                 self._results[r.id] = qr
                 self.metrics.record_result(qr.latency_s, qr.from_cache)
                 out.append(qr)
@@ -337,23 +479,39 @@ class GraphServer:
             return []
         return self._complete(self._dispatch_batch(batch, buffer))
 
-    def drain(self) -> list[QueryResult]:
+    def drain(self, max_wait_s: float | None = None) -> list[QueryResult]:
         """Serve until the queue is empty, software-pipelined: the next
-        micro-batch is formed and dispatched while the previous one's device
-        computation settles."""
+        micro-batch is formed and dispatched while the previous one's
+        device computation settles.
+
+        With ``max_wait_s`` (argument, or the server-level default) the
+        scheduler defers partial buckets: a batchable queue that cannot
+        fill the largest bucket waits — for concurrent submitters to top
+        it up — until its oldest request hits the deadline, then flushes
+        partial.  That bounds p99 at low offered load instead of wedging
+        behind an unfillable bucket."""
+        if max_wait_s is None:
+            max_wait_s = self.max_wait_s
         done: list[QueryResult] = []
         inflight: _InFlight | None = None
         while True:
+            now = time.time()
             with self._lock:
-                batch = self._batcher.next_batch()
+                batch = self._batcher.next_batch(now=now,
+                                                 max_wait_s=max_wait_s)
                 buffer = self._front
+                waited = self._batcher.oldest_wait(now)
             nxt = (self._dispatch_batch(batch, buffer)
                    if batch is not None else None)
             if inflight is not None:
                 done.extend(self._complete(inflight))
             inflight = nxt
             if inflight is None:
-                return done
+                if waited is None:      # queue truly empty
+                    return done
+                # queued work exists but is deferred to fill its bucket:
+                # sleep toward the flush deadline, then re-check
+                time.sleep(max(min(max_wait_s - waited, 1e-3), 1e-4))
 
     def serve(self, requests: list[QueryRequest]) -> list[QueryResult]:
         """Convenience: submit a burst and drain it; results in input order."""

@@ -37,6 +37,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from ..core.graph import edge_weights
 from ..engine.plan import PartitionPlan, replica_masks
 
 
@@ -76,6 +77,7 @@ def patch_plan(plan: PartitionPlan, changes: Iterable[EdgeChange]
     last_slot = np.array(plan.last_slot)
     csr_fill = np.array(plan.csr_fill)
     v_fill = np.array(plan.v_fill)
+    ew = np.array(plan.edge_w)
 
     touched: set[int] = set()
     g2l: dict[int, np.ndarray] = {}
@@ -155,11 +157,14 @@ def patch_plan(plan: PartitionPlan, changes: Iterable[EdgeChange]
         lu = ensure_vertex(int(c.u))
         lv = ensure_vertex(int(c.v))
         s0, s1 = fe.pop(), fe.pop()
+        # same content hash compile_plan uses: patched == recompiled weights
+        w_uv = float(edge_weights(np.asarray([c.u]), np.asarray([c.v]))[0])
         for s, t_, n_ in ((s0, lu, lv), (s1, lv, lu)):
             tgt[p, s] = t_
             nbr[p, s] = n_
             em[p, s] = True
             seg[p, s] = True              # every appended slot: own segment
+            ew[p, s] = w_uv
         _edge_slots(p).setdefault((min(c.u, c.v), max(c.u, c.v)),
                                   []).extend([s0, s1])
         touched.add(p)
@@ -187,4 +192,5 @@ def patch_plan(plan: PartitionPlan, changes: Iterable[EdgeChange]
         n_local=jnp.asarray(n_local), n_edges_local=jnp.asarray(n_edges_local),
         n_replicated=jnp.asarray(replicated.sum(1).astype(np.int32)),
         csr_fill=jnp.asarray(csr_fill), v_fill=jnp.asarray(v_fill),
+        edge_w=jnp.asarray(ew),
     )

@@ -71,6 +71,12 @@ class StreamSession:
         # re-auction patch, or compaction recompile) — the serving layer's
         # epoch-change signal. ``epoch`` only tracks compactions (retraces).
         self.version = 0
+        # what the most recent installed plan changed about the graph
+        # *content* — the serving layer's warm-start lineage signal:
+        # "insert_only" / "none" hops keep previous-epoch results valid as
+        # relaxation upper bounds, "mixed" (any deletion) breaks the chain.
+        self.last_change: dict = {"event": "init", "content_delta": "none",
+                                  "inserts": 0, "deletes": 0, "moves": 0}
         self._subscribers: list[Callable[["StreamSession", str], None]] = []
         self._compile()
         self.rf_base = self.plan.replication_factor()
@@ -119,23 +125,41 @@ class StreamSession:
                                  vertex_slack=vertex_slack, epoch=self.epoch)
         self.engine = Engine(self.plan)
 
-    def _recompile(self) -> None:
-        """Compaction epoch: full plan rebuild; the next query retraces."""
+    @staticmethod
+    def _delta_of(changes: list[EdgeChange]) -> dict:
+        """Summarise the graph-content delta of a change batch. Re-auction
+        moves (old >= 0 and new >= 0) relocate edges between partitions
+        without touching content, so a move-only batch is "none"."""
+        ins = sum(c.old < 0 for c in changes)
+        dels = sum(c.new < 0 for c in changes)
+        moves = len(changes) - ins - dels
+        delta = "mixed" if dels else ("insert_only" if ins else "none")
+        return {"content_delta": delta, "inserts": ins, "deletes": dels,
+                "moves": moves}
+
+    def _recompile(self, delta: dict | None = None) -> None:
+        """Compaction epoch: full plan rebuild; the next query retraces.
+        ``delta`` describes the content change the rebuild absorbs (a pure
+        compaction changes no content)."""
         self.epoch += 1
         self.n_recompiles += 1
         self._compile()
+        self.last_change = {"event": "recompile",
+                            **(delta or self._delta_of([]))}
         self._notify("recompile")
 
     def _patch(self, changes: list[EdgeChange]) -> None:
         if not changes:
             return
+        delta = self._delta_of(changes)
         try:
             self.plan = patch_plan(self.plan, changes)
             self.engine = self.engine.with_plan(self.plan)
             self.n_patches += 1
+            self.last_change = {"event": "patch", **delta}
             self._notify("patch")
         except SlackExhausted:
-            self._recompile()
+            self._recompile(delta)
 
     # -- update ingestion ---------------------------------------------------
     def apply(self, inserts=None, deletes=None) -> dict:
@@ -187,12 +211,12 @@ class StreamSession:
     def _flush_via_compaction(self, pending: list[EdgeChange]) -> None:
         """Compact the graph's slot space; pending patch changes are
         absorbed by the recompile (owner already reflects them)."""
-        del pending
+        delta = self._delta_of(pending)
         keep = self.sg.compact(headroom_frac=self.cfg.compaction_headroom)
         owner = np.full(self.sg.e_pad, -2, np.int32)
         owner[:len(keep)] = self.owner[keep]
         self.owner = owner
-        self._recompile()
+        self._recompile(delta)
 
     # -- drift-triggered local re-auction -----------------------------------
     def _drifted(self) -> bool:

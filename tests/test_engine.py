@@ -103,6 +103,56 @@ def test_engine_matches_oracles(graphs, profile, partitioner):
         assert r.total_exchanged == int(r.supersteps) * m.messages
 
 
+@pytest.mark.parametrize("partitioner", list(PARTITIONERS))
+@pytest.mark.parametrize("profile", list(PROFILES))
+def test_weighted_sssp_and_bfs_match_oracles(graphs, profile, partitioner):
+    """The two registry-registered programs: weighted SSSP (per-half-edge
+    content-hash weights via plan.edge_w + the EdgeProgram ``edge`` hook)
+    and BFS hop levels — bit-identical to core/algorithms.py oracles."""
+    g = graphs[profile]
+    for k in (2, 4):
+        owner = PARTITIONERS[partitioner](g, k)
+        eng = E.Engine(E.compile_plan(g, owner, k))
+        rw = E.engine_weighted_sssp(eng, 0)
+        refw = alg.reference_weighted_sssp(g, 0)
+        assert np.array_equal(np.asarray(rw.state), refw), \
+            (profile, partitioner, k, "wsssp")
+        rb = E.engine_bfs(eng, 0)
+        refb = alg.reference_bfs(g, 0)
+        assert np.array_equal(np.asarray(rb.state), refb), \
+            (profile, partitioner, k, "bfs")
+
+
+def test_warm_init_exact_and_fewer_supersteps(graphs):
+    """warm_init: re-running from a previous exact result converges in one
+    superstep with an identical answer; warm-starting from upper bounds
+    (the insert-only repair scenario) also stays exact. +inf rows of a
+    batched warm block cold-start their lane."""
+    g = graphs["road"]          # high diameter -> many cold supersteps
+    owner = baselines.greedy_partition(g, 4, seed=0)
+    eng = E.Engine(E.compile_plan(g, owner, 4))
+    cold = eng.run(E.SSSP, source=jnp.int32(0))
+    warm = eng.run(E.SSSP, source=jnp.int32(0), warm_state=cold.state)
+    assert np.array_equal(np.asarray(warm.state), np.asarray(cold.state))
+    assert int(warm.supersteps) == 1 < int(cold.supersteps)
+    # upper-bound init (everything shifted up, except the exact source row)
+    upper = np.minimum(np.asarray(cold.state) + 2.0, np.inf)
+    upper[0] = 0.0
+    rep = eng.run(E.SSSP, source=jnp.int32(0), warm_state=upper)
+    assert np.array_equal(np.asarray(rep.state), np.asarray(cold.state))
+    # batched: lane 0 warm (exact prev), lane 1 "no information" (+inf)
+    srcs = np.array([0, 5], np.int32)
+    block = np.stack([np.asarray(cold.state),
+                      np.full(g.n_vertices, np.inf, np.float32)])
+    rb = eng.run_batched(E.SSSP, {"source": srcs}, warm_state=block)
+    ref0, _ = alg.reference_sssp(g, 0)
+    ref5, _ = alg.reference_sssp(g, 5)
+    assert np.array_equal(np.asarray(rb.state[0]), np.asarray(ref0))
+    assert np.array_equal(np.asarray(rb.state[1]), np.asarray(ref5))
+    ss = np.asarray(rb.supersteps).reshape(-1)
+    assert ss[0] <= ss[1], "the warm lane must not converge slower"
+
+
 def test_multi_source_batched(graphs):
     """Serving path: one vmapped loop answers a batch of sources."""
     g = graphs["smallworld"]

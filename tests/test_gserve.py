@@ -1,9 +1,13 @@
 """repro.gserve correctness: micro-batch scheduling (pad-to-bucket, FIFO
-coalescing), result-cache sharing across tenants with exact content-keyed
-invalidation, admission control, warm jit caches across bursts, and the
+coalescing), registry-derived request validation, result-cache sharing
+across tenants with exact content-keyed invalidation, fair-share admission
+control, timer-based partial-bucket flush, warm-started repair across
+insert-only stream patches, warm jit caches across bursts, and the
 serving-under-mutation contract — every result bit-identical to the
 whole-graph oracle for the snapshot (version) it was served from, with no
 stale cache entry surviving a plan swap."""
+import time
+
 import numpy as np
 import pytest
 
@@ -23,16 +27,15 @@ def _static_server(n=150, k=4, seed=3, **kw):
 
 
 def _check(result, g):
-    req = result.request
-    if req.kind == "sssp":
-        ref, _ = alg.reference_sssp(g, req.source)
-        assert np.array_equal(result.value, np.asarray(ref)), req
-    elif req.kind == "wcc":
-        ref, _ = alg.reference_cc(g)
-        assert np.array_equal(result.value, np.asarray(ref)), req
+    """Generic oracle check — derived from the registry entry, so it covers
+    every registered program without naming one."""
+    entry = result.request.entry
+    ref = entry.oracle(g, **result.request.params)
+    if entry.oracle_atol:
+        np.testing.assert_allclose(result.value, np.asarray(ref),
+                                   atol=entry.oracle_atol)
     else:
-        ref = alg.reference_pagerank(g, iters=req.iters)
-        np.testing.assert_allclose(result.value, np.asarray(ref), atol=1e-5)
+        assert np.array_equal(result.value, np.asarray(ref)), result.request
 
 
 # ---------------------------------------------------------------------------
@@ -47,12 +50,12 @@ def test_bucket_for():
 
 def test_microbatcher_coalescing_and_fifo():
     b = G.MicroBatcher(buckets=(1, 2, 4))
-    reqs = [G.QueryRequest("sssp", tenant="a", source=1),
+    reqs = [G.QueryRequest("sssp", tenant="a", params={"source": 1}),
             G.QueryRequest("wcc", tenant="b"),
-            G.QueryRequest("sssp", tenant="b", source=2),
-            G.QueryRequest("sssp", tenant="c", source=1),   # dup source
+            G.QueryRequest("sssp", tenant="b", params={"source": 2}),
+            G.QueryRequest("sssp", tenant="c", params={"source": 1}),  # dup
             G.QueryRequest("wcc", tenant="c"),
-            G.QueryRequest("pagerank", tenant="a", iters=5)]
+            G.QueryRequest("pagerank", tenant="a", params={"iters": 5})]
     for r in reqs:
         b.add(r)
     assert len(b) == 6
@@ -65,14 +68,14 @@ def test_microbatcher_coalescing_and_fifo():
     m2 = b.next_batch()                 # both wcc requests share one run
     assert m2.key == ("wcc",) and len(m2.requests) == 2 and m2.params is None
     m3 = b.next_batch()
-    assert m3.key == ("pagerank", 5)
+    assert m3.key == ("pagerank", ("iters", 5))
     assert b.next_batch() is None and len(b) == 0
 
 
 def test_padded_params_repeat_last():
     b = G.MicroBatcher(buckets=(4,))
     for s in (5, 9, 13):
-        b.add(G.QueryRequest("sssp", source=s))
+        b.add(G.QueryRequest("sssp", params={"source": s}))
     m = b.next_batch()
     assert m.bucket == 4 and m.padded_params == (5, 9, 13, 13)
 
@@ -84,17 +87,37 @@ def test_request_validation():
         G.QueryRequest("betweenness")            # unknown kind
 
 
+def test_param_normalization_pagerank_iters_default():
+    """Regression for the iters=None vs default identity bug: omitting a
+    defaulted param and passing its default spell the SAME query, so they
+    coalesce into one dispatch and share one cache entry."""
+    a = G.QueryRequest("pagerank")
+    b = G.QueryRequest("pagerank", params={"iters": 30})
+    assert a.params == b.params == {"iters": 30}
+    assert a.batch_key() == b.batch_key()
+    assert a.cache_key() == b.cache_key()
+    c = G.QueryRequest("pagerank", params={"iters": 10})
+    assert c.batch_key() != a.batch_key()
+    # and end-to-end: the default-spelled request hits the explicit one's
+    # cache entry (one engine run total)
+    _, srv = _static_server()
+    r1 = srv.serve([G.QueryRequest("pagerank")])[0]
+    r2 = srv.serve([G.QueryRequest("pagerank", params={"iters": 30})])[0]
+    assert not r1.from_cache and r2.from_cache
+
+
 # ---------------------------------------------------------------------------
 # static serving
 # ---------------------------------------------------------------------------
 
 def test_serve_matches_oracles_mixed_tenants():
     g, srv = _static_server(buckets=(1, 2, 4, 8))
-    reqs = [G.QueryRequest("sssp", tenant=f"t{i % 3}", source=(i * 7) % 150)
+    reqs = [G.QueryRequest("sssp", tenant=f"t{i % 3}",
+                           params={"source": (i * 7) % 150})
             for i in range(10)]
     reqs += [G.QueryRequest("wcc", tenant="t3"),
              G.QueryRequest("wcc", tenant="t4"),
-             G.QueryRequest("pagerank", tenant="t5", iters=10)]
+             G.QueryRequest("pagerank", tenant="t5", params={"iters": 10})]
     out = srv.serve(reqs)
     assert [r.request.id for r in out] == [r.id for r in reqs]
     for r in out:
@@ -105,11 +128,32 @@ def test_serve_matches_oracles_mixed_tenants():
     assert st["mean_batch_occupancy"] > 1.0
 
 
+def test_serve_new_programs_registered_via_registry():
+    """Weighted SSSP and BFS were registered through the public registry
+    API only — the serving stack derives their dispatch entirely from the
+    entry (zero gserve edits), and results are bit-identical to the
+    core/algorithms.py oracles."""
+    g, srv = _static_server(buckets=(1, 2, 4))
+    reqs = [G.QueryRequest("wsssp", tenant="a", params={"source": 3}),
+            G.QueryRequest("wsssp", tenant="b", params={"source": 11}),
+            G.QueryRequest("bfs", tenant="a", params={"source": 3}),
+            G.QueryRequest("bfs", tenant="c", params={"source": 40})]
+    out = srv.serve(reqs)
+    for r in out:
+        _check(r, g)
+    # cross-tenant cache sharing works for registered programs too
+    r2 = srv.serve([G.QueryRequest("wsssp", tenant="z",
+                                   params={"source": 3})])[0]
+    assert r2.from_cache
+
+
 def test_result_cache_shared_across_tenants():
     g, srv = _static_server()
-    a = srv.serve([G.QueryRequest("sssp", tenant="a", source=11)])[0]
+    a = srv.serve([G.QueryRequest("sssp", tenant="a",
+                                  params={"source": 11})])[0]
     assert not a.from_cache
-    b = srv.serve([G.QueryRequest("sssp", tenant="b", source=11)])[0]
+    b = srv.serve([G.QueryRequest("sssp", tenant="b",
+                                  params={"source": 11})])[0]
     assert b.from_cache and np.array_equal(a.value, b.value)
     w1 = srv.serve([G.QueryRequest("wcc", tenant="a")])[0]
     w2 = srv.serve([G.QueryRequest("wcc", tenant="b")])[0]
@@ -124,15 +168,82 @@ def test_result_cache_shared_across_tenants():
 
 def test_admission_control():
     _, srv = _static_server(max_pending=2)
-    srv.submit(G.QueryRequest("sssp", source=1))
-    srv.submit(G.QueryRequest("sssp", source=2))
+    srv.submit(G.QueryRequest("sssp", params={"source": 1}))
+    srv.submit(G.QueryRequest("sssp", params={"source": 2}))
     with pytest.raises(G.AdmissionError):
-        srv.submit(G.QueryRequest("sssp", source=3))
+        srv.submit(G.QueryRequest("sssp", params={"source": 3}))
     assert srv.stats()["rejected"] == 1
     out = srv.drain()                   # queue drains; door reopens
     assert len(out) == 2
-    srv.submit(G.QueryRequest("sssp", source=3))
+    srv.submit(G.QueryRequest("sssp", params={"source": 3}))
     assert len(srv.drain()) == 1
+
+
+def test_fair_share_admission_no_starvation():
+    """Per-tenant fair share: one tenant saturating the queue cannot lock
+    a quiet tenant out. The hog is capped at max_pending//active_tenants
+    once contention exists, while the newcomer's first request is admitted
+    even at a full queue — and gets served."""
+    g, srv = _static_server(max_pending=8)
+    admitted = 0
+    with pytest.raises(G.AdmissionError):
+        for i in range(20):
+            srv.submit(G.QueryRequest("sssp", tenant="hog",
+                                      params={"source": i}))
+            admitted += 1
+    assert admitted == 8                   # solo tenant may fill the queue
+    # the quiet tenant still gets in at a full queue ...
+    qid = srv.submit(G.QueryRequest("sssp", tenant="quiet",
+                                    params={"source": 99}))
+    # ... and with 2 active tenants the hog is now over its share (8 >= 4)
+    with pytest.raises(G.AdmissionError, match="fair share"):
+        srv.submit(G.QueryRequest("sssp", tenant="hog",
+                                  params={"source": 50}))
+    assert srv.stats()["rejected_fair_share"] >= 1
+    out = srv.drain()
+    served = {r.request.id: r for r in out}
+    assert qid in served                   # the quiet tenant was served
+    _check(served[qid], g)
+    # queue drained: the hog's door reopens
+    srv.submit(G.QueryRequest("sssp", tenant="hog", params={"source": 50}))
+    assert len(srv.drain()) == 1
+    # the first-request exemption is bounded: a flood of fresh tenant ids
+    # hits the 2*max_pending hard wall instead of growing without bound
+    n_in = 0
+    with pytest.raises(G.AdmissionError, match="hard limit"):
+        for i in range(1000):
+            srv.submit(G.QueryRequest("sssp", tenant=f"fresh{i}",
+                                      params={"source": i % 150}))
+            n_in += 1
+    assert n_in == 2 * 8
+    srv.drain()
+
+
+def test_timer_flush_bounds_partial_bucket_wait():
+    """drain(max_wait_s): a partial bucket waits for the deadline (giving
+    concurrent submitters time to fill it), then flushes anyway — while a
+    full bucket dispatches immediately, without waiting."""
+    g, srv = _static_server(buckets=(4,), max_wait_s=0.15)
+    # warm the (bucket=4) jit shape outside the timing
+    srv.serve([G.QueryRequest("sssp", params={"source": s})
+               for s in (90, 91, 92, 93)])
+    for s in (1, 2, 3):
+        srv.submit(G.QueryRequest("sssp", params={"source": s}))
+    t0 = time.time()
+    out = srv.drain()
+    waited = time.time() - t0
+    assert len(out) == 3 and all(r.bucket == 4 for r in out)
+    assert waited >= 0.12, "partial bucket must wait toward the deadline"
+    for r in out:
+        _check(r, g)
+    # a full bucket never waits: with a deadline far beyond the service
+    # time, drain returns as soon as the batch completes
+    srv.max_wait_s = 30.0
+    for s in (20, 21, 22, 23):
+        srv.submit(G.QueryRequest("sssp", params={"source": s}))
+    t0 = time.time()
+    out = srv.drain()
+    assert len(out) == 4 and time.time() - t0 < 5.0
 
 
 def test_pad_to_bucket_keeps_jit_cache_warm():
@@ -140,11 +251,15 @@ def test_pad_to_bucket_keeps_jit_cache_warm():
     the first burst warms the (bucket=4) shape, later bursts of 2, 3 and 4
     distinct sources must not retrace."""
     g, srv = _static_server(buckets=(4,))
-    srv.serve([G.QueryRequest("sssp", source=s) for s in (1, 2, 3)])
+    srv.serve([G.QueryRequest("sssp", params={"source": s})
+               for s in (1, 2, 3)])
     traced = runtime.TRACE_COUNTER["run_loop"]
-    srv.serve([G.QueryRequest("sssp", source=s) for s in (20, 21)])
-    srv.serve([G.QueryRequest("sssp", source=s) for s in (30, 31, 32, 33)])
-    out = srv.serve([G.QueryRequest("sssp", source=s) for s in (40, 41, 42)])
+    srv.serve([G.QueryRequest("sssp", params={"source": s})
+               for s in (20, 21)])
+    srv.serve([G.QueryRequest("sssp", params={"source": s})
+               for s in (30, 31, 32, 33)])
+    out = srv.serve([G.QueryRequest("sssp", params={"source": s})
+                     for s in (40, 41, 42)])
     assert runtime.TRACE_COUNTER["run_loop"] == traced, \
         "padded micro-batches must hit the warm jit cache"
     for r in out:
@@ -181,14 +296,54 @@ def _session_server(n=200, k=4, seed=3, **kw):
 
 def test_plan_swap_on_stream_update():
     sess, srv = _session_server()
-    r0 = srv.serve([G.QueryRequest("sssp", source=0)])[0]
+    r0 = srv.serve([G.QueryRequest("sssp", params={"source": 0})])[0]
     assert r0.version == 0 and not r0.from_cache
     sess.apply(inserts=np.array([[1, 150], [2, 160]]))
-    r1 = srv.serve([G.QueryRequest("sssp", source=0)])[0]
+    r1 = srv.serve([G.QueryRequest("sssp", params={"source": 0})])[0]
     assert r1.version > r0.version and r1.fingerprint != r0.fingerprint
     assert not r1.from_cache, "cache must not serve across a plan swap"
     _check(r1, sess.graph())
     assert srv.stats()["plan_buffer_swaps"] >= 1
+
+
+def test_warm_start_repair_after_insert_only_patch():
+    """ROADMAP item: incremental SSSP result repair. After an insert-only
+    patch the server warm-starts the repeated query from the previous
+    epoch's distances (valid upper bounds) — the result stays bit-identical
+    to the post-patch oracle while converging in no more supersteps than a
+    cold recompute; a deletion breaks the lineage and forces cold."""
+    sess, srv = _session_server(n=240, seed=5)
+    cold = srv.serve([G.QueryRequest("sssp", params={"source": 7}),
+                      G.QueryRequest("wsssp", params={"source": 7})])
+    assert all(not r.warm_start for r in cold)
+    # small insert-only patch (offset-3 pairs: absent from the WS(k=4)
+    # lattice): old distances are upper bounds
+    sess.apply(inserts=np.array([[3, 6], [10, 13]]))
+    warm = srv.serve([G.QueryRequest("sssp", params={"source": 7}),
+                      G.QueryRequest("wsssp", params={"source": 7})])
+    for r, c in zip(warm, cold):
+        assert r.warm_start and not r.from_cache
+        assert r.supersteps <= c.supersteps
+        _check(r, sess.graph())
+    # chained insert-only patches keep the lineage alive — and in a mixed
+    # batch only the lane with history is stamped warm: a never-before-seen
+    # source coalesced into the same dispatch runs (and reports) cold
+    sess.apply(inserts=np.array([[20, 23]]))
+    warm2, fresh = srv.serve([
+        G.QueryRequest("sssp", params={"source": 7}),
+        G.QueryRequest("sssp", params={"source": 101})])
+    assert warm2.warm_start and not fresh.warm_start
+    assert fresh.bucket == warm2.bucket, "same dispatch"
+    _check(warm2, sess.graph())
+    _check(fresh, sess.graph())
+    # a deletion breaks it: the warm store is dropped, dispatch goes cold
+    gu, gv = sess.graph().as_numpy()
+    sess.apply(deletes=np.array([[gu[0], gv[0]]]))
+    post = srv.serve([G.QueryRequest("sssp", params={"source": 7}),
+                      G.QueryRequest("bfs", params={"source": 7})])
+    assert all(not r.warm_start for r in post)
+    for r in post:
+        _check(r, sess.graph())
 
 
 def test_inflight_queries_drain_against_captured_buffer():
@@ -198,9 +353,9 @@ def test_inflight_queries_drain_against_captured_buffer():
     sess, srv = _session_server(buckets=(2,))
     g_old = sess.graph()
     for s in (0, 3, 9, 12):
-        srv.submit(G.QueryRequest("sssp", source=s))
+        srv.submit(G.QueryRequest("sssp", params={"source": s}))
     first = srv.pump()                         # one bucket=2 batch, old plan
-    assert [r.request.source for r in first] == [0, 3]
+    assert [r.request.params["source"] for r in first] == [0, 3]
     sess.apply(inserts=np.array([[0, 100], [3, 150], [9, 180]]))
     rest = srv.drain()                         # remaining queue, new plan
     g_new = sess.graph()
@@ -228,11 +383,12 @@ def test_serving_under_mutation_stress():
     for round_ in range(4):
         # a burst of multi-tenant queries ...
         reqs = [G.QueryRequest("sssp", tenant=f"t{i % 3}",
-                               source=int(rng.integers(0, n_v)))
+                               params={"source": int(rng.integers(0, n_v))})
                 for i in range(5)]
         reqs.append(G.QueryRequest("wcc", tenant="t0"))
         if round_ % 2:
-            reqs.append(G.QueryRequest("pagerank", tenant="t1", iters=8))
+            reqs.append(G.QueryRequest("pagerank", tenant="t1",
+                                       params={"iters": 8}))
         for r in reqs:
             srv.submit(r)
         results.extend(srv.pump())             # partially drain ...
@@ -263,12 +419,12 @@ def test_epoch_bump_compaction_consistency():
     sess = S.StreamSession(g, S.StreamConfig(k=3, chunk_size=32,
                                              drift_threshold=1e9), key=0)
     srv = G.GraphServer.from_session(sess)
-    r0 = srv.serve([G.QueryRequest("sssp", source=0)])[0]
+    r0 = srv.serve([G.QueryRequest("sssp", params={"source": 0})])[0]
     assert r0.epoch == 0
     rng = np.random.default_rng(1)
     stats = sess.apply(inserts=rng.integers(0, 100, size=(400, 2)))
     assert stats["recompiles"] >= 1
-    r1 = srv.serve([G.QueryRequest("sssp", source=0)])[0]
+    r1 = srv.serve([G.QueryRequest("sssp", params={"source": 0})])[0]
     assert r1.epoch == sess.epoch >= 1
     assert not r1.from_cache
     _check(r1, sess.graph())

@@ -1,0 +1,245 @@
+"""Program-registry contract: typed misuse errors with actionable messages,
+param normalization, warm-state validation, the no-per-kind-branching
+invariant of the serving layer, and the acceptance flow — a program
+registered through the PUBLIC API only runs partition → engine → stream
+patch → serve with zero edits under src/repro/gserve/."""
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import baselines, dfep, graph
+from repro import engine as E
+from repro import gserve as G
+from repro import stream as S
+from repro.engine import registry
+
+
+# ---------------------------------------------------------------------------
+# typed misuse errors
+# ---------------------------------------------------------------------------
+
+def test_duplicate_registration_raises():
+    with pytest.raises(E.DuplicateProgramError, match="already registered"):
+        E.register("sssp", E.SSSP,
+                   params=[E.ParamSpec("source", int, batchable=True)])
+
+
+def test_unknown_program_raises():
+    with pytest.raises(E.UnknownProgramError, match="registered:"):
+        E.get_program("nope")
+    with pytest.raises(E.UnknownProgramError):
+        G.QueryRequest("nope")
+
+
+def test_unknown_param_raises():
+    with pytest.raises(E.UnknownParamError, match="declared: source"):
+        G.QueryRequest("sssp", params={"source": 0, "radius": 3})
+
+
+def test_missing_required_param_raises():
+    with pytest.raises(E.ParamTypeError, match="requires parameter"):
+        G.QueryRequest("sssp")
+
+
+def test_wrong_dtype_raises():
+    with pytest.raises(E.ParamTypeError, match="expects int"):
+        G.QueryRequest("sssp", params={"source": 1.5})
+    with pytest.raises(E.ParamTypeError, match="expects int"):
+        G.QueryRequest("sssp", params={"source": "zero"})
+    with pytest.raises(E.ParamTypeError):
+        G.QueryRequest("sssp", params={"source": True})   # bool is not int
+    # numpy integer scalars coerce cleanly
+    r = G.QueryRequest("sssp", params={"source": np.int64(4)})
+    assert r.params["source"] == 4 and type(r.params["source"]) is int
+
+
+def test_batch_axis_on_scalar_param_raises():
+    # non-batchable param passed a batch axis
+    with pytest.raises(E.BatchAxisError, match="not batchable"):
+        G.QueryRequest("pagerank", params={"iters": [10, 20]})
+    # a batchable param still takes one scalar per request — the scheduler
+    # forms the batch axis by coalescing requests
+    with pytest.raises(E.BatchAxisError, match="one request"):
+        G.QueryRequest("sssp", params={"source": np.arange(4)})
+
+
+def test_param_validate_hook_runs():
+    with pytest.raises(ValueError, match=">= 0"):
+        G.QueryRequest("pagerank", params={"iters": -1})
+
+
+def test_warm_state_shape_mismatch_raises():
+    g = graph.watts_strogatz(80, 4, 0.1, seed=0)
+    eng = E.Engine(E.compile_plan(g, baselines.hash_partition(g, 2), 2))
+    with pytest.raises(E.WarmStateError, match="80 vertices"):
+        eng.run(E.SSSP, source=jnp.int32(0), warm_state=np.zeros(7))
+    with pytest.raises(E.WarmStateError, match="no warm_init hook"):
+        eng.run(E.WCC, warm_state=np.zeros(80))
+    # batched: one [V] row per lane required
+    with pytest.raises(E.WarmStateError):
+        eng.run_batched(E.SSSP, {"source": np.array([0, 1], np.int32)},
+                        warm_state=np.zeros(80))
+
+
+def test_registration_schema_validation():
+    with pytest.raises(E.RegistryError, match="at most one batchable"):
+        registry.ProgramRegistry().register(
+            "two-axes", E.SSSP,
+            params=[E.ParamSpec("a", int, batchable=True),
+                    E.ParamSpec("b", int, batchable=True)])
+    with pytest.raises(E.RegistryError, match="duplicate parameter"):
+        registry.ProgramRegistry().register(
+            "dup", E.SSSP, params=[E.ParamSpec("a"), E.ParamSpec("a")])
+    with pytest.raises(E.RegistryError, match="role"):
+        registry.ProgramRegistry().register(
+            "badrole", E.SSSP, params=[E.ParamSpec("a", int, role="wat")])
+    # defaults run the same dtype/validate gauntlet as caller values —
+    # a bad default fails at REGISTRATION, not deep inside a dispatch
+    with pytest.raises(E.RegistryError, match="default .* is invalid"):
+        registry.ProgramRegistry().register(
+            "baddefault", E.SSSP, params=[E.ParamSpec("iters", int,
+                                                      default=None)])
+    def _pos(v):
+        if v <= 0:
+            raise ValueError("must be > 0")
+    with pytest.raises(ValueError, match="> 0"):
+        registry.ProgramRegistry().register(
+            "badvalidated", E.SSSP,
+            params=[E.ParamSpec("n", int, default=0, validate=_pos)])
+
+
+# ---------------------------------------------------------------------------
+# derived keys
+# ---------------------------------------------------------------------------
+
+def test_keys_derive_from_normalized_params():
+    a = G.QueryRequest("sssp", tenant="a", params={"source": 3})
+    b = G.QueryRequest("sssp", tenant="b", params={"source": 3})
+    assert a.batch_key() == b.batch_key() == ("sssp",)
+    assert a.cache_key() == b.cache_key() == ("sssp", ("source", 3))
+    entry = E.get_program("sssp")
+    assert entry.lane_cache_key(a.params, 9) == ("sssp", ("source", 9))
+
+
+def test_no_kind_string_branching_in_gserve():
+    """CI-guarded invariant, enforced in tier-1 too: the serving layer
+    derives everything from the registry and never branches on program-kind
+    strings."""
+    root = pathlib.Path(__file__).resolve().parents[1] / "src/repro/gserve"
+    offenders = [p.name for p in sorted(root.glob("*.py"))
+                 if 'kind == "' in p.read_text()]
+    assert not offenders, f"per-kind branching found in: {offenders}"
+
+
+# ---------------------------------------------------------------------------
+# acceptance: a user program, public API only, partition → engine →
+# stream patch → serve
+# ---------------------------------------------------------------------------
+
+def _hops2_oracle(g, source):
+    """Vertices within 2 hops of source (1.0/0.0), via the BFS oracle."""
+    from repro.core import algorithms as alg
+    lvl = alg.reference_bfs(g, source)
+    return ((lvl >= 0) & (lvl <= 2)).astype(np.float32)
+
+
+def _make_hops2():
+    """A genuinely new EdgeProgram built from public pieces: 2-hop
+    reachability (min-hop relaxation capped at 2, finalized to 1/0)."""
+    INF = jnp.float32(jnp.inf)
+
+    def init(plan, ctx):
+        hit = plan.vmask & (plan.local2global == ctx["source"])
+        return jnp.where(hit, 0.0, INF)
+
+    def finalize(glob, present, plan, ctx):
+        iota = jnp.arange(plan.n_vertices)
+        isolated = jnp.where(iota == ctx["source"], 0.0, INF)
+        d = jnp.where(present, glob, isolated)
+        return (d <= 2.0).astype(jnp.float32)
+
+    return E.EdgeProgram(
+        name="hops2", mode="replica", combine="min",
+        prepare=lambda plan, kw: {"source": kw["source"]},
+        init=init, pre=lambda s, ctx: s, apply=lambda o, a, ctx:
+        jnp.minimum(o, jnp.minimum(a, 3.0)),    # cap: hops beyond 2 are 3
+        finalize=finalize, local_fixpoint=True,
+        edge=lambda m, plan, ctx: m + 1.0)
+
+
+@pytest.fixture
+def hops2_registered():
+    E.register("hops2", _make_hops2(),
+               params=[E.ParamSpec("source", int, batchable=True)],
+               oracle=_hops2_oracle)
+    yield
+    E.unregister("hops2")
+
+
+def test_custom_program_end_to_end(hops2_registered):
+    """Register through the public API, then flow partition → engine →
+    stream patch → serve without touching a single gserve module."""
+    g = graph.watts_strogatz(160, 4, 0.15, seed=2)
+    sess = S.StreamSession(g, S.StreamConfig(k=4, chunk_size=32,
+                                             drift_threshold=1e9), key=0)
+    srv = G.GraphServer.from_session(sess, buckets=(1, 2, 4))
+    out = srv.serve([G.QueryRequest("hops2", tenant=f"t{i}",
+                                    params={"source": s})
+                     for i, s in enumerate((0, 17, 45))])
+    for r in out:
+        assert np.array_equal(r.value, _hops2_oracle(sess.graph(),
+                                                     r.request.params["source"]))
+    # live update: the patched plan serves the registered program too
+    sess.apply(inserts=np.array([[0, 80], [17, 120]]),
+               deletes=None)
+    r = srv.serve([G.QueryRequest("hops2", params={"source": 0})])[0]
+    assert not r.from_cache
+    assert np.array_equal(r.value, _hops2_oracle(sess.graph(), 0))
+
+
+def test_new_programs_flow_through_stream_patch():
+    """Weighted SSSP and BFS (registered via the public registry API) stay
+    bit-identical to their oracles across live patches — the plan's
+    per-half-edge weights are maintained by the patch path."""
+    from repro.core import algorithms as alg
+    g = graph.watts_strogatz(150, 4, 0.2, seed=4)
+    sess = S.StreamSession(g, S.StreamConfig(k=4, chunk_size=32,
+                                             drift_threshold=1e9), key=0)
+    rng = np.random.default_rng(3)
+    for _ in range(2):
+        gu, gv = sess.graph().as_numpy()
+        kill = rng.choice(len(gu), size=3, replace=False)
+        sess.apply(inserts=rng.integers(0, 150, size=(5, 2)),
+                   deletes=np.stack([gu[kill], gv[kill]], 1))
+        g_now = sess.graph()
+        rw = sess.engine.run(E.WEIGHTED_SSSP, source=jnp.int32(1))
+        assert np.array_equal(np.asarray(rw.state),
+                              alg.reference_weighted_sssp(g_now, 1))
+        rb = sess.engine.run(E.BFS, source=jnp.int32(1))
+        assert np.array_equal(np.asarray(rb.state),
+                              alg.reference_bfs(g_now, 1))
+
+
+def test_patched_plan_weights_match_recompiled():
+    """plan.edge_w after in-place patching equals a from-scratch compile of
+    the same content (the content-hash weight function is the contract)."""
+    g = graph.watts_strogatz(100, 4, 0.1, seed=6)
+    sess = S.StreamSession(g, S.StreamConfig(k=3, chunk_size=16,
+                                             drift_threshold=1e9), key=0)
+    sess.apply(inserts=np.array([[0, 50], [1, 60], [2, 70]]))
+    assert sess.n_patches >= 1, "update should patch, not recompile"
+    fresh = E.compile_plan(sess.graph(), sess.owner, 3)
+    # compare weights per (partition, global-target, global-nbr) half-edge
+    def wmap(plan):
+        l2g = np.asarray(plan.local2global)
+        tgt = np.asarray(plan.edge_tgt)
+        nbr = np.asarray(plan.edge_nbr)
+        em = np.asarray(plan.emask)
+        ew = np.asarray(plan.edge_w)
+        return {(p, int(l2g[p, tgt[p, s]]), int(l2g[p, nbr[p, s]])):
+                float(ew[p, s])
+                for p in range(plan.k) for s in np.flatnonzero(em[p])}
+    assert wmap(sess.plan) == wmap(fresh)
