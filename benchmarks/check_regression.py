@@ -1,0 +1,209 @@
+"""CI bench-regression gate: compare fresh BENCH_*.json records against the
+committed baselines in experiments/bench/ and fail on regression.
+
+    python benchmarks/check_regression.py \
+        --baseline experiments/bench --fresh /tmp/bench-fresh \
+        [--tol 0.2] [--tol-perf 0.5]
+
+Policy (per leaf value, walking the JSON trees in lockstep):
+
+  * **structure** — every fresh ``BENCH_*.json`` must have a committed
+    baseline, every baseline key must exist in the fresh record, lists must
+    keep their length, and bool/str leaves must match exactly (an
+    ``exact_vs_oracle`` flip or a vanished registered program is a
+    regression no tolerance excuses).  Baselines with no fresh counterpart
+    (figures outside the smoke set, e.g. BENCH_scalability.json from fig8)
+    are reported and skipped.
+  * **deterministic numerics** (superstep counts, replication factors,
+    occupancies, graph sizes, ...) — relative tolerance ``--tol``
+    (default 0.2): the seeds are fixed, so these only move when the code's
+    behaviour moves.
+  * **throughput** (keys containing ``qps`` or ``speedup``) — one-sided
+    relative
+    tolerance ``--tol-perf`` (default 0.5): higher-is-better, so only a
+    DROP below ``baseline * (1 - tol_perf)`` fails — loose enough for
+    runner-to-runner machine variance, tight enough to catch a serving
+    path falling off a cliff; a big improvement is reported as a note
+    (refresh the baselines to tighten the line).
+  * **batch-shape accounting** (keys containing ``batches``,
+    ``occupancy``, ``pad_waste``) — relative tolerance ``--tol-perf``
+    both ways: scheduling under the timer-flush sweeps is load-timing
+    dependent, but the shapes must stay in the same regime.
+  * **wall-clock seconds** (keys ending ``_s`` / containing ``_s_``,
+    ``wall``, ``warmup``, ``latency``) — skipped by default (pure machine
+    speed; the qps and superstep lines already bound the same behaviour),
+    listed in the report; ``--strict-seconds`` compares them one-sided
+    (slower fails) at ``--tol-perf``.
+
+Exit status 0 = green, 1 = regression (each one printed with its JSON
+path, baseline and fresh values).  Regenerating the committed baselines is
+``REPRO_BENCH_OUT=experiments/bench python -m benchmarks.run`` under the
+CI environment (see .github/workflows/ci.yml bench-smoke).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+_SECONDS_HINTS = ("wall", "warmup", "latency")
+_HIGHER_BETTER_HINTS = ("qps", "speedup")
+_SHAPE_HINTS = ("batches", "occupancy", "pad_waste")
+
+
+def _is_seconds_key(key: str) -> bool:
+    k = key.lower()
+    return (k.endswith("_s") or "_s_" in k
+            or any(h in k for h in _SECONDS_HINTS))
+
+
+def _is_higher_better_key(key: str) -> bool:
+    k = key.lower()
+    return any(h in k for h in _HIGHER_BETTER_HINTS)
+
+
+def _is_shape_key(key: str) -> bool:
+    k = key.lower()
+    return any(h in k for h in _SHAPE_HINTS)
+
+
+class Report:
+    def __init__(self):
+        self.errors: list[str] = []
+        self.skipped: list[str] = []
+        self.notes: list[str] = []
+
+    def error(self, msg: str) -> None:
+        self.errors.append(msg)
+
+    def skip(self, msg: str) -> None:
+        self.skipped.append(msg)
+
+    def note(self, msg: str) -> None:
+        self.notes.append(msg)
+
+
+def _compare(base, fresh, path: str, key: str, args, rep: Report) -> None:
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            rep.error(f"{path}: baseline is an object, fresh is "
+                      f"{type(fresh).__name__}")
+            return
+        for k in base:
+            if k not in fresh:
+                rep.error(f"{path}.{k}: key present in baseline, missing "
+                          "from fresh record")
+            else:
+                _compare(base[k], fresh[k], f"{path}.{k}", k, args, rep)
+        for k in fresh:
+            if k not in base:
+                rep.note(f"{path}.{k}: new key (no baseline) — commit "
+                         "updated baselines to start gating it")
+        return
+    if isinstance(base, list):
+        if not isinstance(fresh, list):
+            rep.error(f"{path}: baseline is a list, fresh is "
+                      f"{type(fresh).__name__}")
+            return
+        if len(base) != len(fresh):
+            rep.error(f"{path}: list length {len(base)} -> {len(fresh)}")
+            return
+        for i, (b, f) in enumerate(zip(base, fresh)):
+            _compare(b, f, f"{path}[{i}]", key, args, rep)
+        return
+    if base is None or fresh is None:
+        if base is not fresh:
+            rep.error(f"{path}: {base!r} -> {fresh!r}")
+        return
+    if isinstance(base, bool) or isinstance(fresh, bool) \
+            or isinstance(base, str) or isinstance(fresh, str):
+        if base != fresh:
+            rep.error(f"{path}: {base!r} -> {fresh!r} (exact-match leaf)")
+        return
+    # numeric leaf
+    seconds = _is_seconds_key(key)
+    if seconds and not args.strict_seconds:
+        rep.skip(f"{path}: wall-clock key ({base} -> {fresh})")
+        return
+    denom = max(abs(float(base)), 1e-9)
+    rel = (float(fresh) - float(base)) / denom      # signed: >0 means grew
+    if _is_higher_better_key(key) or (seconds and args.strict_seconds):
+        # one-sided perf line: only the BAD direction fails (qps dropping,
+        # seconds growing); a large move the other way is worth refreshing
+        # the baseline for, but is not a regression
+        bad = -rel if _is_higher_better_key(key) else rel
+        if bad > args.tol_perf:
+            rep.error(f"{path}: {base} -> {fresh} (worse by {bad:.1%} > "
+                      f"tolerance {args.tol_perf:.0%})")
+        elif -bad > args.tol_perf:
+            rep.note(f"{path}: {base} -> {fresh} improved by {-bad:.1%} — "
+                     "consider refreshing the committed baseline")
+        return
+    tol = args.tol_perf if _is_shape_key(key) else args.tol
+    if abs(rel) > tol:
+        rep.error(f"{path}: {base} -> {fresh} (rel change {abs(rel):.1%} > "
+                  f"tolerance {tol:.0%})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail CI when fresh BENCH_*.json records regress "
+                    "against the committed baselines")
+    ap.add_argument("--baseline", default="experiments/bench",
+                    help="directory of committed BENCH_*.json baselines")
+    ap.add_argument("--fresh", required=True,
+                    help="directory of freshly generated BENCH_*.json")
+    ap.add_argument("--tol", type=float, default=0.2,
+                    help="relative tolerance for deterministic numerics "
+                         "(superstep counts, rf, sizes; default 0.2)")
+    ap.add_argument("--tol-perf", type=float, default=0.5,
+                    help="relative tolerance for throughput keys (qps; "
+                         "default 0.5 — absorbs runner machine variance)")
+    ap.add_argument("--strict-seconds", action="store_true",
+                    help="also gate wall-clock seconds keys at --tol-perf "
+                         "instead of skipping them")
+    args = ap.parse_args(argv)
+
+    base_dir = pathlib.Path(args.baseline)
+    fresh_dir = pathlib.Path(args.fresh)
+    fresh_files = sorted(fresh_dir.glob("BENCH_*.json"))
+    if not fresh_files:
+        print(f"ERROR: no fresh BENCH_*.json under {fresh_dir}")
+        return 1
+
+    rep = Report()
+    for f in fresh_files:
+        b = base_dir / f.name
+        if not b.exists():
+            rep.error(f"{f.name}: fresh record has NO committed baseline — "
+                      f"run the benchmark with REPRO_BENCH_OUT={base_dir} "
+                      "and commit the result")
+            continue
+        _compare(json.loads(b.read_text()), json.loads(f.read_text()),
+                 f.stem, "", args, rep)
+    fresh_names = {f.name for f in fresh_files}
+    for b in sorted(base_dir.glob("BENCH_*.json")):
+        if b.name not in fresh_names:
+            rep.note(f"{b.name}: baseline has no fresh counterpart in this "
+                     "run — not gated")
+
+    for msg in rep.notes:
+        print(f"NOTE      {msg}")
+    for msg in rep.skipped:
+        print(f"SKIPPED   {msg}")
+    for msg in rep.errors:
+        print(f"REGRESSED {msg}")
+    n_cmp = len(fresh_files)
+    if rep.errors:
+        print(f"\nbench-regression gate: FAIL — {len(rep.errors)} "
+              f"regression(s) across {n_cmp} record(s)")
+        return 1
+    print(f"\nbench-regression gate: OK — {n_cmp} record(s) within "
+          f"tolerance (tol={args.tol:.0%}, tol-perf={args.tol_perf:.0%}, "
+          f"{len(rep.skipped)} wall-clock leaves skipped)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,7 @@
 """Program-registry benchmark: registry-derived serving of the registered
 program catalogue + warm-start repair vs cold recompute.
 
-Two sweeps, both driven entirely off ``engine.registry`` (no program is
+Three sweeps, all driven entirely off ``engine.registry`` (no program is
 named in the harness — the registration IS the benchmark entry):
 
   1. **catalogue** — for every registered batchable program with an oracle
@@ -10,7 +10,14 @@ named in the harness — the registration IS the benchmark entry):
      the extensibility acceptance: weighted SSSP and BFS flow partition →
      engine → serve through the same generic path as the built-ins.
 
-  2. **warm-start repair** — the ROADMAP "incremental SSSP result repair"
+  2. **property channels** — for every registered program declaring
+     channel params (label propagation, personalized PageRank), serve a
+     multi-tenant burst where most tenants share one feature plane and one
+     supplies a different plane: results are oracle-validated per supplied
+     plane, and the record reports how many answers the channel-hash cache
+     legally shared (``cache_shared``) next to ``distinct_results`` >= 2.
+
+  3. **warm-start repair** — the ROADMAP "incremental SSSP result repair"
      point: query, apply a small insert-only stream patch, query again.
      The warm server repairs from the previous epoch's distances
      (``warm_init`` upper-bound relaxation) while a control server with
@@ -74,6 +81,52 @@ def _catalogue_sweep(g, k: int, n_queries: int) -> list[dict]:
     return rows
 
 
+def _channel_sweep(g, k: int, n_tenants: int) -> list[dict]:
+    """Property-channel serving, driven entirely off the registry: for
+    every registered non-batchable program declaring channel params and an
+    oracle (labelprop, ppr, ...), serve ``n_tenants`` requests sharing one
+    feature plane plus one tenant with a different plane.  Validates the
+    channel-hash cache contract operationally — same plane: one dispatch +
+    cache sharing; different plane: its own dispatch, never aliased — and
+    each result against the oracle on the exact supplied plane."""
+    owner, _ = dfep.partition(g, k=k, key=0)
+    plan = E.compile_plan(g, np.asarray(owner), k)
+    rng = np.random.default_rng(7)
+    rows = []
+    for entry in DEFAULT_REGISTRY.entries():
+        if not entry.channel_params or entry.oracle is None \
+                or entry.batchable:
+            continue
+
+        def plane(spec):
+            n = g.n_vertices if spec.channel == "vertex" else g.e_pad
+            return rng.random((n, spec.features)).astype(np.float32)
+
+        params_a = {s.name: plane(s) for s in entry.channel_params}
+        params_b = {s.name: plane(s) for s in entry.channel_params}
+        srv = G.GraphServer(E.Engine(plan), g)
+        srv.serve([G.QueryRequest(entry.name, params=params_a)])   # warm jit
+        srv.metrics.reset()
+        t0 = time.time()
+        out = srv.serve(
+            [G.QueryRequest(entry.name, tenant=f"t{i}", params=params_a)
+             for i in range(n_tenants)]
+            + [G.QueryRequest(entry.name, tenant="z", params=params_b)])
+        wall = time.time() - t0
+        exact = all(np.allclose(r.value,
+                                entry.oracle(g, **r.request.params),
+                                atol=entry.oracle_atol, equal_nan=True)
+                    for r in out)
+        distinct = len({r.value.tobytes() for r in out})
+        rows.append({"program": entry.name, "n_queries": len(out),
+                     "qps": round(len(out) / max(wall, 1e-9), 2),
+                     "exact_vs_oracle": bool(exact),
+                     "cache_shared": int(sum(r.from_cache for r in out)),
+                     "distinct_results": int(distinct)})
+        srv.close()
+    return rows
+
+
 def _warm_repair_sweep(g, k: int, program: str, n_patches: int) -> dict:
     """Repeated query across small insert-only patches: warm server repairs
     from the previous epoch, the control (warm_entries=0) recomputes."""
@@ -126,6 +179,7 @@ def run(scale: float = SCALE, k: int = 8, n_queries: int = 16,
         n_patches: int = 4) -> dict:
     g = _ring_graph(max(int(4000 * scale), 256))
     catalogue = _catalogue_sweep(g, k, n_queries)
+    channels = _channel_sweep(g, k, n_tenants=4)
     repair = [_warm_repair_sweep(_ring_graph(max(int(4000 * scale), 256)),
                                  k, prog, n_patches)
               for prog in ("sssp", "wsssp")]
@@ -133,6 +187,7 @@ def run(scale: float = SCALE, k: int = 8, n_queries: int = 16,
         "n_vertices": g.n_vertices, "n_edges": g.n_edges, "k": k,
         "registered_programs": DEFAULT_REGISTRY.names(),
         "catalogue": catalogue,
+        "channels": channels,
         "warm_repair": repair,
         # headline acceptance numbers
         "warm_supersteps": repair[0]["warm_supersteps_mean"],

@@ -1,25 +1,44 @@
 """Benchmark runner: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig9] [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig9 | --all] [--fast]
 
-Emits ``name,us_per_call,derived`` CSVs under experiments/bench/ and prints
-each table. ``--fast`` shrinks scales/samples for a quick pass.
+Emits ``name,us_per_call,derived`` CSVs and BENCH_*.json records under
+experiments/bench/ and prints each table. ``--fast`` shrinks scales/samples
+for a quick pass.
+
+Two guarantees the CI bench gate leans on:
+
+  * **no silent skips** — every ``fig*.py`` / ``kernel_bench.py`` module in
+    this package must be registered below; a module on disk that the
+    registry does not know is a startup error, so a new figure cannot
+    quietly drop out of ``--all``;
+  * **non-zero on crash** — each selected benchmark runs even if an earlier
+    one crashed, the tracebacks are printed, and the process exits 1 if
+    ANY of them failed (previously the first crash aborted the rest and a
+    partially-written artifact dir could pass for a finished run).
 """
 from __future__ import annotations
 
 import argparse
 import os
+import pathlib
 import sys
 import time
+import traceback
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6,fig7,fig8,fig9,fig10,"
-                         "stream,serve,programs,kernels")
+                         "stream,serve,serve_mesh,programs,kernels")
+    ap.add_argument("--all", action="store_true",
+                    help="run every registered benchmark (the default when "
+                         "--only is absent; the two flags are exclusive)")
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
+    if args.only and args.all:
+        ap.error("--only and --all are exclusive")
     if args.fast:
         os.environ.setdefault("REPRO_BENCH_SCALE", "0.05")
         os.environ.setdefault("REPRO_BENCH_SAMPLES", "2")
@@ -27,7 +46,7 @@ def main() -> None:
     # imports AFTER env so common.py picks the scales up
     from . import (fig5_k_sweep, fig6_diameter, fig7_comparison,
                    fig8_scalability, fig9_sssp, fig10_engine, fig_programs,
-                   fig_serve, fig_stream, kernel_bench)
+                   fig_serve, fig_serve_mesh, fig_stream, kernel_bench)
 
     all_benches = {
         "fig5": fig5_k_sweep.main,
@@ -38,19 +57,43 @@ def main() -> None:
         "fig10": fig10_engine.main,
         "stream": fig_stream.main,
         "serve": fig_serve.main,
+        "serve_mesh": fig_serve_mesh.main,
         "programs": fig_programs.main,
         "kernels": kernel_bench.main,
     }
+    # registry completeness: every benchmark module on disk must be wired
+    # in, or --all silently under-reports (the CI gate assumes coverage)
+    here = pathlib.Path(__file__).resolve().parent
+    on_disk = {p.stem for p in here.glob("fig*.py")} | {"kernel_bench"}
+    registered = {fn.__module__.rsplit(".", 1)[-1]
+                  for fn in all_benches.values()}
+    unwired = sorted(on_disk - registered)
+    if unwired:
+        ap.error(f"benchmark module(s) on disk but not registered in "
+                 f"benchmarks.run: {', '.join(unwired)}")
+
     only = args.only.split(",") if args.only else list(all_benches)
     unknown = sorted(set(only) - set(all_benches))
     if unknown:
         ap.error(f"unknown benchmark(s) {','.join(unknown)}; "
                  f"available: {','.join(all_benches)}")
+    failures: list[str] = []
     for name in only:
         t0 = time.time()
         print(f"\n### running {name} ...", flush=True)
-        all_benches[name]()
-        print(f"### {name} done in {time.time()-t0:.1f}s", flush=True)
+        try:
+            all_benches[name]()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"### {name} FAILED after {time.time()-t0:.1f}s",
+                  flush=True)
+        else:
+            print(f"### {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print(f"\n### {len(failures)} benchmark(s) crashed: "
+              f"{', '.join(failures)}", flush=True)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -244,6 +244,55 @@ def reference_weighted_sssp(g: Graph, source: int) -> np.ndarray:
     return dist
 
 
+def reference_label_propagation(g: Graph, labels) -> np.ndarray:
+    """Min-label propagation over an *external* label plane: every vertex
+    converges to the smallest label present in its connected component
+    (vertices keep their own label if isolated).
+
+    ``labels`` is a [V] or [V, 1] float32 plane (the engine's vertex
+    property channel format).  Labels flow through ``min`` only — no
+    arithmetic — so the engine result is bit-identical to this oracle
+    regardless of partitioning or padding.
+    """
+    lab = np.asarray(labels, np.float32).reshape(-1)
+    u, v = g.as_numpy()
+    out = lab.copy()
+    for _ in range(g.n_vertices):
+        new = out.copy()
+        np.minimum.at(new, v, out[u])
+        np.minimum.at(new, u, out[v])
+        if np.array_equal(new, out):
+            break
+        out = new
+    return out
+
+
+def reference_personalized_pagerank(g: Graph, personalization, iters: int = 30,
+                                    damping: float = 0.85) -> np.ndarray:
+    """Degree-weighted PageRank with an external personalization (teleport)
+    vector: ``rank <- (1-d) * p + d * inflow`` where each vertex spreads
+    ``rank/deg`` along its edges.  ``p`` is a [V] or [V, 1] plane supplied
+    by the caller (the engine's vertex property channel); it is used as
+    given — normalise it to a distribution if you want a distribution out.
+    Float32 partial sums reassociate across partitions, so engine results
+    match to ``oracle_atol`` (1e-5), like plain PageRank.
+    """
+    p = jnp.asarray(np.asarray(personalization, np.float32).reshape(-1))
+    v_n = g.n_vertices
+    deg = jnp.maximum(g.degrees().astype(jnp.float32), 1.0)
+    rank = p
+
+    def step(rank, _):
+        c = rank / deg
+        inflow = (jnp.zeros_like(rank)
+                  .at[g.dst].add(jnp.where(g.edge_mask, c[g.src], 0.0))
+                  .at[g.src].add(jnp.where(g.edge_mask, c[g.dst], 0.0)))
+        return (1.0 - damping) * p + damping * inflow, None
+
+    rank, _ = jax.lax.scan(step, rank, None, length=int(iters))
+    return np.asarray(rank)
+
+
 def reference_bfs(g: Graph, source: int) -> np.ndarray:
     """BFS hop levels: 0.0 at the source, the hop count elsewhere, and
     -1.0 for vertices unreachable from the source (float32, matching the

@@ -43,3 +43,10 @@ class BatchAxisError(RegistryError):
 class WarmStateError(RegistryError):
     """``warm_state`` was passed to a program without a ``warm_init`` hook,
     or its shape does not match the plan's vertex space."""
+
+
+class ChannelError(RegistryError):
+    """A property-channel value is malformed: wrong rank/feature width at
+    construction, or — at dispatch — a plane whose leading length does not
+    match the plan it is being served against (e.g. a ``[V, F]`` vertex
+    plane passed where an edge-slot plane was declared, or vice versa)."""

@@ -31,6 +31,12 @@ changes: the runtime applies the ``EdgeProgram.edge`` hook (e.g.
 the weighted messages flow through the same segmented scan — masked
 (deleted/padding) slots are pinned to the combine identity *after* the
 hook, so they stay inert regardless of their weight.
+
+``gather_vertex_channel`` / ``gather_edge_channel`` lay externally
+supplied property planes (registry ``role="channel"`` params) out to the
+partition-local padded shapes the programs consume — slack-aware (pad and
+reserved slots pinned to the fill value) and fully traced, so the same
+compiled gather serves every in-place plan patch.
 """
 from __future__ import annotations
 
@@ -128,6 +134,48 @@ def segment_reduce(plan, messages: jax.Array, combine: str = "min",
     else:  # add identity is 0.0, so the masked scatter is exact
         agg = agg.at[rows, plan.edge_tgt].add(slack)
     return jnp.where(plan.vmask, agg, ident)
+
+
+def gather_vertex_channel(plan, values: jax.Array) -> jax.Array:
+    """Slack-aware layout of a global vertex property plane.
+
+    values [V, F] (or [V]) -> [K, Vmax, F]: each live local slot takes its
+    vertex's feature row via ``plan.local2global``; padding AND reserved
+    slack slots (``vmask`` False) are pinned to 0.0 so a patched plan that
+    populates a slack slot later picks the right row automatically — the
+    gather runs traced, against the dynamic plan children, so it is valid
+    for every in-place patch without retracing.  Programs call this from
+    ``prepare`` (inside the shard_map body on mesh paths, where the local
+    plan block gathers from the replicated [V, F] plane).
+    """
+    if values.ndim == 1:
+        values = values[:, None]
+    local = values[plan.local2global]                   # [K, Vmax, F]
+    return jnp.where(plan.vmask[:, :, None], local, 0.0)
+
+
+def gather_edge_channel(plan, values: jax.Array, fill: float = 0.0
+                        ) -> jax.Array:
+    """Slack-aware layout of an edge property plane in graph slot order.
+
+    values [E_pad, F] (or [E_pad]) -> [K, Emax, F]: every live half-edge
+    (CSR prefix *and* append/slack region — ``plan.edge_slot`` is
+    maintained by both compile_plan and the streaming patch path) takes the
+    feature row of its undirected edge's graph slot; pad slots and
+    half-edges whose slot is unknown (patched in without slot provenance,
+    edge_slot == -1) take ``fill``.  Masked slots are additionally pinned
+    to the combine identity downstream of the ``edge`` hook, so garbage can
+    never leak into an aggregate.
+    """
+    if values.ndim == 1:
+        values = values[:, None]
+    # slots beyond the supplied plane read ``fill``, never a clamped row —
+    # a plane covering only the CSR prefix must fail soft, not alias row n-1
+    ok = plan.emask & (plan.edge_slot >= 0) \
+        & (plan.edge_slot < values.shape[0])
+    rows = jnp.clip(plan.edge_slot, 0, values.shape[0] - 1)
+    local = values[rows]                                # [K, Emax, F]
+    return jnp.where(ok[:, :, None], local, jnp.float32(fill))
 
 
 def segment_reduce_ref(plan, messages: jax.Array,

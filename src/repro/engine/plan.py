@@ -64,6 +64,9 @@ class PartitionPlan:
     v_max: int               # padded local-vertex capacity
     e_max: int               # padded directed-half-edge capacity (>= 1 pad slot)
     epoch: int               # compaction epoch; bumps only on full recompile
+    e_slots: int             # Graph.e_pad the plan was compiled against —
+                             #   the static row capacity of edge property
+                             #   channels ([E_pad, F] planes in slot order)
 
     # local vertex space
     local2global: jax.Array  # [K, Vmax] int32 — global id per local slot (pad: 0)
@@ -91,15 +94,21 @@ class PartitionPlan:
     # (messages flow weighted through the segment-reduce kernels; masked
     # slots are still pinned to the combine identity there)
     edge_w: jax.Array        # [K, Emax] float32
+    # graph edge slot of each half-edge (-1 at pad / unknown slots) — the
+    # index plane edge property channels gather through
+    # (kernels.gather_edge_channel); maintained by compile_plan AND the
+    # streaming patch path so externally supplied [E_pad, F] planes stay
+    # aligned across in-place plan patches
+    edge_slot: jax.Array     # [K, Emax] int32
 
     def tree_flatten(self):
         children = (self.local2global, self.vmask, self.edge_tgt,
                     self.edge_nbr, self.emask, self.seg_start, self.last_slot,
                     self.replicated, self.is_master, self.n_local,
                     self.n_edges_local, self.n_replicated, self.csr_fill,
-                    self.v_fill, self.edge_w)
+                    self.v_fill, self.edge_w, self.edge_slot)
         return children, (self.k, self.n_vertices, self.v_max, self.e_max,
-                          self.epoch)
+                          self.epoch, self.e_slots)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -125,6 +134,19 @@ class PartitionPlan:
         if cached is None:
             cached = int(jnp.sum(self.n_local))
             object.__setattr__(self, "_sum_local_vertices", cached)
+        return cached
+
+    @property
+    def edge_slot_hwm(self) -> int:
+        """1 + the highest graph edge slot any live half-edge references —
+        the minimum row count an edge channel plane must supply. Memoized
+        host-side like the other replica stats (one device sync per plan
+        instance; the serving path validates every channel dispatch)."""
+        cached = self.__dict__.get("_edge_slot_hwm")
+        if cached is None:
+            cached = int(jnp.max(jnp.where(self.emask, self.edge_slot,
+                                           -1))) + 1
+            object.__setattr__(self, "_edge_slot_hwm", cached)
         return cached
 
     def exchange_per_superstep(self) -> int:
@@ -183,6 +205,7 @@ def compile_plan(g: Graph, owner, k: int, *, edge_slack: int = 0,
     u = np.asarray(g.src)
     v = np.asarray(g.dst)
     em = np.asarray(g.edge_mask)
+    gslot = np.flatnonzero(em).astype(np.int32)   # graph slot per live edge
     u, v, owner = u[em], v[em], owner[em]
     assert len(u) == 0 or (owner.min() >= 0 and owner.max() < k), \
         "owner must assign every real edge to [0, k)"
@@ -205,6 +228,7 @@ def compile_plan(g: Graph, owner, k: int, *, edge_slack: int = 0,
     emask_p = np.zeros((k, e_max), bool)
     seg_start = np.zeros((k, e_max), bool)
     ew = np.ones((k, e_max), np.float32)
+    eslot = np.full((k, e_max), -1, np.int32)
     # degree-0/pad vertices point at the last slot, which is always padding
     last_slot = np.full((k, v_max), e_max - 1, np.int32)
 
@@ -220,12 +244,14 @@ def compile_plan(g: Graph, owner, k: int, *, edge_slack: int = 0,
         t = np.concatenate([ut, vt])            # half-edge targets
         n = np.concatenate([vt, ut])            # half-edge sources
         w2 = np.tile(edge_weights(u[sel], v[sel]), 2)   # both half-edges
+        s2 = np.tile(gslot[sel], 2)             # graph slot, both half-edges
         order = np.argsort(t, kind="stable")
-        t, n, w2 = t[order], n[order], w2[order]
+        t, n, w2, s2 = t[order], n[order], w2[order], s2[order]
         ne = len(t)
         tgt[i, :ne] = t
         nbr[i, :ne] = n
         ew[i, :ne] = w2
+        eslot[i, :ne] = s2
         emask_p[i, :ne] = True
         if ne:
             seg_start[i, 0] = True
@@ -243,7 +269,7 @@ def compile_plan(g: Graph, owner, k: int, *, edge_slack: int = 0,
 
     return PartitionPlan(
         k=int(k), n_vertices=int(g.n_vertices), v_max=int(v_max),
-        e_max=int(e_max), epoch=int(epoch),
+        e_max=int(e_max), epoch=int(epoch), e_slots=int(g.e_pad),
         local2global=jnp.asarray(l2g), vmask=jnp.asarray(vmask),
         edge_tgt=jnp.asarray(tgt), edge_nbr=jnp.asarray(nbr),
         emask=jnp.asarray(emask_p), seg_start=jnp.asarray(seg_start),
@@ -254,6 +280,7 @@ def compile_plan(g: Graph, owner, k: int, *, edge_slack: int = 0,
         csr_fill=jnp.asarray(2 * e_cnt),
         v_fill=jnp.asarray(n_local),
         edge_w=jnp.asarray(ew),
+        edge_slot=jnp.asarray(eslot),
     )
 
 
@@ -282,7 +309,16 @@ def _owner_digest(g: Graph, owner) -> str:
 
 def compile_plan_cached(g: Graph, owner, k: int, *, edge_slack: int = 0,
                         vertex_slack: int = 0, epoch: int = 0) -> PartitionPlan:
-    """Memoized compile_plan, keyed by graph/assignment *content*."""
+    """Memoized compile_plan, keyed by graph/assignment *content*.
+
+    Caveat for edge property channels: the cache key is slot-order
+    invariant but ``plan.edge_slot`` is not — two content-equal graphs
+    whose live edges occupy different slots (delete + re-insert through a
+    StreamingGraph) would read an [E_pad, F] plane differently.  The
+    streaming session therefore compiles uncached; use this entry point
+    for static graphs (where slot order is canonical) or vertex-channel /
+    channel-free workloads.
+    """
     key = (g.fingerprint(), _owner_digest(g, owner), int(k),
            int(edge_slack), int(vertex_slack), int(epoch))
     plan = _PLAN_CACHE.get(key)

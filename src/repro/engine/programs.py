@@ -10,7 +10,12 @@ whole-graph oracles in ``core/algorithms.py``:
   * wsssp      — weighted shortest paths over the plan's per-half-edge
                  content-hash weights (``plan.edge_w``), via the
                  ``EdgeProgram.edge`` hook,
-  * BFS        — hop levels with -1.0 marking unreachable vertices.
+  * BFS        — hop levels with -1.0 marking unreachable vertices,
+  * labelprop  — min-label propagation over an EXTERNAL [V] label plane
+                 (vertex property channel; bit-identical to
+                 ``reference_label_propagation``),
+  * ppr        — personalized PageRank with an external teleport vector
+                 (vertex property channel + degree resource).
 
 Programs are module-level constants (static jit arguments); per-query
 values (source vertex, degree vector) travel in the traced ``ctx`` dict.
@@ -35,6 +40,7 @@ import jax.numpy as jnp
 
 from ..core import algorithms as _alg
 from . import registry
+from .kernels import gather_edge_channel, gather_vertex_channel
 from .plan import PartitionPlan
 from .runtime import EdgeProgram, Engine, EngineResult
 
@@ -209,6 +215,84 @@ BFS = EdgeProgram(
 
 
 # ---------------------------------------------------------------------------
+# Label propagation over an EXTERNAL label plane (vertex property channel).
+# The labels come from outside the graph — a [V] (or [V, 1]) float32 plane
+# supplied at query time or bound once per epoch — and flow through the
+# same min-combine machinery as WCC: every vertex converges to the
+# smallest label in its component.  ``prepare`` gathers the global plane
+# to the partition-local layout with the slack-aware channel gather, so
+# the program is exact on single-device and shard_map paths and across
+# stream patches without any plan surgery.
+# ---------------------------------------------------------------------------
+
+def _lp_prepare(plan, kw):
+    lab = kw["labels"]
+    if lab.ndim == 1:
+        lab = lab[:, None]
+    return {"labels_glob": lab[:, 0],
+            "labels_local": gather_vertex_channel(plan, lab)[:, :, 0]}
+
+
+def _lp_init(plan, ctx):
+    return jnp.where(plan.vmask, ctx["labels_local"], INF)
+
+
+def _lp_warm(plan, prev, ctx):
+    # labels only shrink as edges arrive (a bigger component can only
+    # lower the min), so a previous epoch's result is a valid upper bound
+    # after insert-only patches — identical contract to SSSP warm-start
+    local = jnp.where(plan.vmask, prev[plan.local2global], INF)
+    return jnp.minimum(_lp_init(plan, ctx), local)
+
+
+def _lp_finalize(glob, present, plan, ctx):
+    return jnp.where(present, glob, ctx["labels_glob"])
+
+
+LABELPROP = EdgeProgram(
+    name="labelprop", mode="replica", combine="min",
+    prepare=_lp_prepare, init=_lp_init, pre=_wcc_pre, apply=_min_apply,
+    finalize=_lp_finalize, local_fixpoint=True, warm_init=_lp_warm)
+
+
+# ---------------------------------------------------------------------------
+# Personalized PageRank — degree-weighted rank flow with an external
+# teleport vector (vertex property channel).  rank <- (1-d)*p + d*inflow,
+# with p supplied per query; the channel digest keys the cache, so two
+# tenants with different personalization vectors never share an answer.
+# ---------------------------------------------------------------------------
+
+def _ppr_prepare(plan, kw):
+    p = kw["personalization"]
+    if p.ndim == 1:
+        p = p[:, None]
+    deg = jnp.maximum(kw["degrees"].astype(jnp.float32), 1.0)
+    return {"p_glob": p[:, 0],
+            "p_local": gather_vertex_channel(plan, p)[:, :, 0],
+            "deg_local": deg[plan.local2global]}
+
+
+def _ppr_init(plan, ctx):
+    return jnp.where(plan.vmask, ctx["p_local"], 0.0)
+
+
+def _ppr_apply(old, inflow, ctx):
+    return (1.0 - DAMPING) * ctx["p_local"] + DAMPING * inflow
+
+
+def _ppr_finalize(glob, present, plan, ctx):
+    # a vertex in no partition has no edges: rank settles at its teleport
+    return jnp.where(present, glob, (1.0 - DAMPING) * ctx["p_glob"])
+
+
+PPR = EdgeProgram(
+    name="ppr", mode="partial", combine="add",
+    prepare=_ppr_prepare, init=_ppr_init, pre=_pr_pre,
+    apply=_ppr_apply, finalize=_ppr_finalize,
+    local_fixpoint=False, default_supersteps=30)
+
+
+# ---------------------------------------------------------------------------
 # Convenience entry points
 # ---------------------------------------------------------------------------
 
@@ -238,6 +322,19 @@ def multi_source_sssp(engine: Engine, sources) -> EngineResult:
     every query; ``result.state`` is [S, V]."""
     sources = jnp.asarray(sources, jnp.int32)
     return engine.run_batched(SSSP, {"source": sources})
+
+
+def engine_label_propagation(engine: Engine, labels) -> EngineResult:
+    """Min-label propagation over an external [V] / [V, 1] label plane."""
+    return engine.run(LABELPROP, labels=jnp.asarray(labels, jnp.float32))
+
+
+def engine_personalized_pagerank(engine: Engine, degrees: jax.Array,
+                                 personalization,
+                                 iters: int = 30) -> EngineResult:
+    return engine.run(PPR, max_supersteps=iters, degrees=degrees,
+                      personalization=jnp.asarray(personalization,
+                                                  jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -284,4 +381,25 @@ registry.register(
     "bfs", BFS,
     params=[registry.ParamSpec("source", int, batchable=True)],
     oracle=_alg.reference_bfs,
+)
+
+registry.register(
+    "labelprop", LABELPROP,
+    params=[registry.ParamSpec("labels", float, role="channel",
+                               channel="vertex", features=1)],
+    oracle=lambda g, labels: _alg.reference_label_propagation(
+        g, np.asarray(labels)),
+)
+
+registry.register(
+    "ppr", PPR,
+    params=[registry.ParamSpec("personalization", float, role="channel",
+                               channel="vertex", features=1),
+            registry.ParamSpec("iters", int, default=30, role="supersteps",
+                               validate=_non_negative)],
+    resources={"degrees": lambda g: g.degrees()},
+    oracle=lambda g, personalization, iters: np.asarray(
+        _alg.reference_personalized_pagerank(g, np.asarray(personalization),
+                                             iters=iters)),
+    oracle_atol=1e-5,
 )

@@ -77,7 +77,8 @@ class QueryRequest:
 @dataclasses.dataclass(frozen=True)
 class QueryResult:
     request: QueryRequest
-    value: np.ndarray                 # [V] final vertex state
+    value: np.ndarray | None          # [V] final vertex state (None iff
+                                      #   ``error`` is set)
     version: int                      # plan-buffer version served against
     epoch: int                        # plan compaction epoch of that buffer
     fingerprint: str                  # Graph.fingerprint() of the snapshot
@@ -87,10 +88,16 @@ class QueryResult:
     bucket: int                       # padded batch shape dispatched
     latency_s: float                  # submit -> result materialised
     warm_start: bool = False          # dispatched warm from a prior epoch
+    error: str | None = None          # per-request failure (e.g. a channel
+                                      #   plane invalidated by a plan swap
+                                      #   between submit and dispatch) —
+                                      #   the batch fails, the server keeps
+                                      #   serving
 
     def row(self) -> dict[str, Any]:
         return {"id": self.request.id, "kind": self.request.kind,
                 "tenant": self.request.tenant, "version": self.version,
                 "epoch": self.epoch, "from_cache": self.from_cache,
                 "batch_size": self.batch_size, "bucket": self.bucket,
-                "latency_s": self.latency_s, "warm_start": self.warm_start}
+                "latency_s": self.latency_s, "warm_start": self.warm_start,
+                "error": self.error}

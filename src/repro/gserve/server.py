@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.graph import Graph
+from ..engine.errors import ChannelError
 from ..engine.registry import ProgramEntry
 from ..engine.runtime import Engine, PendingResult
 from .cache import ResultCache
@@ -112,6 +113,10 @@ class _InFlight:
                                       # dispatched lane indices that warm-
                                       #   started from a prior epoch's
                                       #   result (others ran cold +inf rows)
+    error: str | None = None          # dispatch-time failure for the whole
+                                      #   batch (channel plane invalidated
+                                      #   by a swap): requests get error
+                                      #   results, the drain loop lives on
 
 
 class GraphServer:
@@ -254,6 +259,11 @@ class GraphServer:
         a quiet tenant out entirely.  The exemption is itself bounded:
         total pending never exceeds ``2 * max_pending``, so a flood of
         fresh tenant ids cannot defeat load shedding."""
+        if req.entry.channel_params:
+            # fail malformed property planes at the door (typed ChannelError
+            # naming the expected shape) instead of inside a later drain —
+            # shape checks only, the layout itself happens per batch
+            req.entry.validate_channels(req.params, self.front.engine.plan)
         with self._lock:
             n_active = len(self._batcher.active_tenants() | {req.tenant})
             share = max(1, self.max_pending // n_active)
@@ -340,6 +350,19 @@ class GraphServer:
         steps = entry.supersteps_of(params0)
         kw = {name: buffer.resource(name, fn) for name, fn in entry.resources}
         kw.update(entry.ctx_args(params0))
+        # property channels: the registry lays the request's content-hashed
+        # planes out against the captured buffer's plan (their digests are
+        # already part of this batch's batch/cache keys — nothing here
+        # depends on which channels, if any, the program declares). A plane
+        # validated at submit can be invalidated by a plan swap landing
+        # before the batch was popped (hwm grown past it / e_pad changed):
+        # that fails THIS batch with per-request error results instead of
+        # throwing away the drain pipeline and wedging waiting submitters.
+        try:
+            kw.update(entry.channel_args(params0, eng.plan))
+        except ChannelError as e:
+            return _InFlight(batch, buffer, None, {}, {}, 0, 0, time.time(),
+                             error=str(e))
         cached: dict[int, np.ndarray] = {}
         lane_of: dict[int, int] = {}
         pending = None
@@ -455,14 +478,15 @@ class GraphServer:
             for r in fl.batch.requests:
                 t0 = self._t_submit.pop(r.id, now)
                 qr = QueryResult(
-                    request=r, value=values[r.id],
+                    request=r, value=values.get(r.id),
                     version=fl.buffer.version, epoch=fl.buffer.epoch,
                     fingerprint=fl.buffer.fingerprint(),
                     supersteps=supersteps.get(r.id, 0),
                     from_cache=r.id in fl.cached,
                     batch_size=len(fl.batch.requests), bucket=fl.bucket,
                     latency_s=now - t0,
-                    warm_start=fl.lane_of.get(r.id, -1) in fl.warm_lanes)
+                    warm_start=fl.lane_of.get(r.id, -1) in fl.warm_lanes,
+                    error=fl.error)
                 self._results[r.id] = qr
                 self.metrics.record_result(qr.latency_s, qr.from_cache)
                 out.append(qr)

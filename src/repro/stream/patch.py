@@ -47,11 +47,19 @@ class SlackExhausted(RuntimeError):
 
 class EdgeChange(NamedTuple):
     """One edge-level ownership delta. ``old == -1``: pure insert;
-    ``new == -1``: pure delete; both >= 0: a re-auction move."""
+    ``new == -1``: pure delete; both >= 0: a re-auction move.
+
+    ``slot`` is the edge's graph slot (StreamingGraph slot id) — the row
+    external edge property channels are keyed by.  The session always
+    provides it; callers constructing raw changes may leave the default
+    -1, in which case the patched half-edges read the channel *fill*
+    value instead of a feature row (plan.edge_slot stays -1 there).
+    """
     u: int
     v: int
     old: int
     new: int
+    slot: int = -1
 
 
 def patch_plan(plan: PartitionPlan, changes: Iterable[EdgeChange]
@@ -78,6 +86,7 @@ def patch_plan(plan: PartitionPlan, changes: Iterable[EdgeChange]
     csr_fill = np.array(plan.csr_fill)
     v_fill = np.array(plan.v_fill)
     ew = np.array(plan.edge_w)
+    eslot = np.array(plan.edge_slot)
 
     touched: set[int] = set()
     g2l: dict[int, np.ndarray] = {}
@@ -165,6 +174,9 @@ def patch_plan(plan: PartitionPlan, changes: Iterable[EdgeChange]
             em[p, s] = True
             seg[p, s] = True              # every appended slot: own segment
             ew[p, s] = w_uv
+            # scatter the inserted edge's graph slot so external edge
+            # channel planes stay aligned: patched == recompiled layout
+            eslot[p, s] = c.slot
         _edge_slots(p).setdefault((min(c.u, c.v), max(c.u, c.v)),
                                   []).extend([s0, s1])
         touched.add(p)
@@ -183,7 +195,7 @@ def patch_plan(plan: PartitionPlan, changes: Iterable[EdgeChange]
 
     return PartitionPlan(
         k=k, n_vertices=n_vertices, v_max=v_cap, e_max=e_cap,
-        epoch=plan.epoch,
+        epoch=plan.epoch, e_slots=plan.e_slots,
         local2global=jnp.asarray(l2g), vmask=jnp.asarray(vmask),
         edge_tgt=jnp.asarray(tgt), edge_nbr=jnp.asarray(nbr),
         emask=jnp.asarray(em), seg_start=jnp.asarray(seg),
@@ -193,4 +205,5 @@ def patch_plan(plan: PartitionPlan, changes: Iterable[EdgeChange]
         n_replicated=jnp.asarray(replicated.sum(1).astype(np.int32)),
         csr_fill=jnp.asarray(csr_fill), v_fill=jnp.asarray(v_fill),
         edge_w=jnp.asarray(ew),
+        edge_slot=jnp.asarray(eslot),
     )

@@ -24,16 +24,50 @@ whole-graph oracles on ``session.graph()`` (tests/test_stream.py).
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Callable
 
 import numpy as np
 
 from ..core import dfep
+from ..engine import registry as _registry
 from ..engine.plan import compile_plan
 from ..engine.runtime import Engine
 from . import assign, reauction
 from .ingest import StreamingGraph, iter_chunks
 from .patch import EdgeChange, SlackExhausted, patch_plan
+
+
+@dataclasses.dataclass
+class _BoundChannel:
+    """One session-maintained property plane (see bind_channel)."""
+    program: str
+    param: str
+    channel: str                      # "vertex" | "edge"
+    features: int
+    values: np.ndarray                # working copy, [V,F] or [e_pad,F]
+    fill: Callable | None             # (u, v) -> feature row for inserts
+
+
+# registry bindings are process-global (they resolve at QueryRequest
+# construction), so two sessions maintaining the same (program, param)
+# would silently clobber each other's planes. This ownership map turns
+# that into a loud error: a session may only (re)bind a slot that is
+# free, or that it already owns. A weakref.finalize per bind releases
+# BOTH the slot and the registry binding when a session is dropped
+# without unbind_channel — a garbage-collected maintainer must not leave
+# its last (now unmaintained) plane silently live for normalize().
+_BINDING_OWNERS: dict[tuple[str, str], "weakref.ref"] = {}
+
+
+def _release_binding(key: tuple[str, str], ref, entry) -> None:
+    """Session finalizer: drop the ownership slot and the registry binding
+    iff they still belong to the dead session (identity-checked via the
+    exact ref object — a successor's rebind installs a different ref and
+    must survive this)."""
+    if _BINDING_OWNERS.get(key) is ref:
+        _BINDING_OWNERS.pop(key, None)
+        entry.unbind_channel(key[1])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +112,7 @@ class StreamSession:
         self.last_change: dict = {"event": "init", "content_delta": "none",
                                   "inserts": 0, "deletes": 0, "moves": 0}
         self._subscribers: list[Callable[["StreamSession", str], None]] = []
+        self._channels: dict[tuple[str, str], _BoundChannel] = {}
         self._compile()
         self.rf_base = self.plan.replication_factor()
 
@@ -148,9 +183,114 @@ class StreamSession:
                             **(delta or self._delta_of([]))}
         self._notify("recompile")
 
+    # -- session-bound property channels ------------------------------------
+    def bind_channel(self, program: str, param: str, values,
+                     fill: Callable | None = None) -> None:
+        """Bind an external property plane "once per epoch" and keep it
+        valid across the session's own mutations.
+
+        ``values``: ``[V, F]`` for vertex channels, ``[n<=e_pad, F]`` in
+        graph edge-slot order for edge channels (zero-padded to e_pad
+        here).  Edge planes are *maintained*: every inserted edge's row is
+        scattered in (``fill(u, v)`` — default zeros) before the plan is
+        patched, and a compaction remaps rows by the same slot gather the
+        owner array uses.  After each maintenance step the plane is
+        re-bound on the registry entry, so new queries pick up a fresh
+        content digest — results computed from the old plane are never
+        aliased with the new one.  Vertex planes need no maintenance
+        (|V| is static); binding them here is pure convenience.
+        """
+        entry = _registry.get_program(program)
+        spec = entry.spec(param)
+        if spec.role != "channel":
+            raise _registry.ChannelError(
+                f"{program}.{param} has role={spec.role!r}, not 'channel' "
+                "— only property channels can be bound")
+        # validate EVERYTHING before touching the registry: a failed bind
+        # must not leave a half-installed plane live for normalize()
+        cv = spec.coerce(program, values)
+        vals = np.array(cv.values, np.float32)        # mutable working copy
+        if spec.channel == "edge":
+            if vals.shape[0] > self.sg.e_pad:
+                raise _registry.ChannelError(
+                    f"{program}.{param}: edge plane has {vals.shape[0]} "
+                    f"rows but the streaming graph holds {self.sg.e_pad} "
+                    "edge slots")
+            if vals.shape[0] < self.sg.e_pad:
+                vals = np.concatenate(
+                    [vals, np.zeros((self.sg.e_pad - vals.shape[0],
+                                     vals.shape[1]), np.float32)])
+        owner = _BINDING_OWNERS.get((program, param))
+        owner = owner() if owner is not None else None
+        if owner is not None and owner is not self:
+            raise _registry.ChannelError(
+                f"{program}.{param} is already bound and maintained by "
+                "another live StreamSession — unbind it there first (one "
+                "maintained binding per program param per process)")
+        # reuse the already-coerced ChannelValue when padding didn't change
+        # the bytes (coercion short-circuits on it: no second copy/hash);
+        # the maintenance rebinds below pass raw arrays — ChannelValue
+        # always takes a private copy, so the working array is safe as-is
+        entry.bind_channel(
+            param, cv if vals.shape == cv.values.shape else vals)
+        ref = weakref.ref(self)
+        _BINDING_OWNERS[(program, param)] = ref
+        weakref.finalize(self, _release_binding, (program, param), ref,
+                         entry)
+        self._channels[(program, param)] = _BoundChannel(
+            program, param, spec.channel, spec.features, vals, fill)
+
+    def unbind_channel(self, program: str, param: str) -> None:
+        """Release a maintained binding. Owner-checked: a session may only
+        release a slot it owns (or a dead/free one) — otherwise one session
+        could drop another's live binding and re-open the silent-clobber
+        window the ownership map closes."""
+        key = (program, param)
+        owner = _BINDING_OWNERS.get(key)
+        owner = owner() if owner is not None else None
+        if owner is not None and owner is not self:
+            raise _registry.ChannelError(
+                f"{program}.{param} is bound and maintained by another "
+                "live StreamSession — only its owner may unbind it")
+        self._channels.pop(key, None)
+        _BINDING_OWNERS.pop(key, None)
+        _registry.get_program(program).unbind_channel(param)
+
+    def _channel_scatter(self, changes: list[EdgeChange]) -> None:
+        """Scatter inserted edges' feature rows into every bound edge
+        plane (and re-bind, bumping the content digest). Runs before the
+        plan is installed so patch and recompile paths see identical
+        planes — patched == recompiled."""
+        inserts = [c for c in changes if c.old < 0 and c.slot >= 0]
+        if not inserts:
+            return
+        for bc in self._channels.values():
+            if bc.channel != "edge":
+                continue
+            for c in inserts:
+                row = (np.zeros(bc.features, np.float32) if bc.fill is None
+                       else np.asarray(bc.fill(c.u, c.v),
+                                       np.float32).reshape(bc.features))
+                bc.values[c.slot] = row
+            _registry.get_program(bc.program).bind_channel(
+                bc.param, bc.values)
+
+    def _channel_remap(self, keep: np.ndarray) -> None:
+        """Compaction epoch: remap every bound edge plane by the same slot
+        gather the owner array uses, re-padded to the fresh e_pad."""
+        for bc in self._channels.values():
+            if bc.channel != "edge":
+                continue
+            vals = np.zeros((self.sg.e_pad, bc.features), np.float32)
+            vals[:len(keep)] = bc.values[keep]
+            bc.values = vals
+            _registry.get_program(bc.program).bind_channel(
+                bc.param, vals)
+
     def _patch(self, changes: list[EdgeChange]) -> None:
         if not changes:
             return
+        self._channel_scatter(changes)
         delta = self._delta_of(changes)
         try:
             self.plan = patch_plan(self.plan, changes)
@@ -178,7 +318,7 @@ class StreamSession:
             res = self.sg.delete_chunk(chunk)
             for s, a, b in zip(res.slots.tolist(), res.u.tolist(),
                                res.v.tolist()):
-                changes.append(EdgeChange(a, b, int(self.owner[s]), -1))
+                changes.append(EdgeChange(a, b, int(self.owner[s]), -1, s))
                 self.owner[s] = -2
                 self.touched[a] = self.touched[b] = True
             self.n_ingested += len(res.slots)
@@ -195,7 +335,7 @@ class StreamSession:
             for s, a, b, p in zip(res.slots.tolist(), res.u.tolist(),
                                   res.v.tolist(), owners.tolist()):
                 self.owner[s] = p
-                changes.append(EdgeChange(a, b, -1, int(p)))
+                changes.append(EdgeChange(a, b, -1, int(p), s))
                 self.touched[a] = self.touched[b] = True
             self.n_ingested += len(res.slots)
 
@@ -211,11 +351,13 @@ class StreamSession:
     def _flush_via_compaction(self, pending: list[EdgeChange]) -> None:
         """Compact the graph's slot space; pending patch changes are
         absorbed by the recompile (owner already reflects them)."""
+        self._channel_scatter(pending)   # pending inserts' rows, old space
         delta = self._delta_of(pending)
         keep = self.sg.compact(headroom_frac=self.cfg.compaction_headroom)
         owner = np.full(self.sg.e_pad, -2, np.int32)
         owner[:len(keep)] = self.owner[keep]
         self.owner = owner
+        self._channel_remap(keep)
         self._recompile(delta)
 
     # -- drift-triggered local re-auction -----------------------------------
@@ -234,7 +376,7 @@ class StreamSession:
         u = np.asarray(g.src)
         v = np.asarray(g.dst)
         changes = [EdgeChange(int(u[s]), int(v[s]), int(self.owner[s]),
-                              int(new_owner[s])) for s in moved]
+                              int(new_owner[s]), int(s)) for s in moved]
         self.owner = new_owner
         self._patch(changes)
         self.n_reauctions += 1

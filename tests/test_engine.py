@@ -123,6 +123,44 @@ def test_weighted_sssp_and_bfs_match_oracles(graphs, profile, partitioner):
             (profile, partitioner, k, "bfs")
 
 
+@pytest.mark.parametrize("partitioner", list(PARTITIONERS))
+@pytest.mark.parametrize("profile", list(PROFILES))
+def test_channel_programs_match_oracles(graphs, profile, partitioner):
+    """The two property-channel programs: label propagation over an
+    external [V] label plane (bit-identical — labels flow through min
+    only) and personalized PageRank with an external teleport vector
+    (1e-5, like plain PageRank: f32 partial sums reassociate)."""
+    g = graphs[profile]
+    rng = np.random.default_rng(11)
+    labels = rng.integers(0, 40, size=g.n_vertices).astype(np.float32)
+    pers = rng.random(g.n_vertices).astype(np.float32)
+    pers /= pers.sum()
+    ref_lp = alg.reference_label_propagation(g, labels)
+    ref_pp = alg.reference_personalized_pagerank(g, pers, iters=15)
+    for k in (2, 4):
+        owner = PARTITIONERS[partitioner](g, k)
+        eng = E.Engine(E.compile_plan(g, owner, k))
+        rl = E.engine_label_propagation(eng, labels)
+        assert np.array_equal(np.asarray(rl.state), ref_lp), \
+            (profile, partitioner, k, "labelprop")
+        rp = E.engine_personalized_pagerank(eng, g.degrees(), pers, iters=15)
+        np.testing.assert_allclose(np.asarray(rp.state), ref_pp, atol=1e-5)
+
+
+def test_labelprop_warm_init_exact():
+    """Insert-only repair contract for labelprop: a previous epoch's labels
+    are valid upper bounds (a larger component only lowers the min)."""
+    g = graph.watts_strogatz(120, 4, 0.05, seed=4)
+    owner = baselines.hash_partition(g, 3)
+    eng = E.Engine(E.compile_plan(g, owner, 3))
+    labels = np.arange(g.n_vertices, dtype=np.float32)
+    cold = eng.run(E.LABELPROP, labels=jnp.asarray(labels))
+    warm = eng.run(E.LABELPROP, labels=jnp.asarray(labels),
+                   warm_state=cold.state)
+    assert np.array_equal(np.asarray(warm.state), np.asarray(cold.state))
+    assert int(warm.supersteps) == 1 <= int(cold.supersteps)
+
+
 def test_warm_init_exact_and_fewer_supersteps(graphs):
     """warm_init: re-running from a previous exact result converges in one
     superstep with an identical answer; warm-starting from upper bounds

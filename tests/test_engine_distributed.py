@@ -108,6 +108,72 @@ BATCHED_SCRIPT = textwrap.dedent("""
 """)
 
 
+CHANNEL_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax, jax.numpy as jnp
+
+    from repro.core import algorithms as alg
+    from repro.core import dfep, graph
+    from repro.core.graph import edge_weights
+    from repro import engine as E
+
+    assert len(jax.devices()) == 8
+    g = graph.watts_strogatz(300, 6, 0.1, seed=2)
+    owner, _ = dfep.partition(g, k=8, key=0, max_rounds=400, stall_rounds=16)
+    plan = E.compile_plan(g, np.asarray(owner), 8)
+    mesh = jax.make_mesh((8,), ("parts",))
+    eng = E.Engine(plan, mesh=mesh)
+
+    # vertex property channels on the sharded superstep: the replicated
+    # [V, F] plane is gathered partition-locally INSIDE the shard_map body
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 40, size=g.n_vertices).astype(np.float32)
+    r = E.engine_label_propagation(eng, labels)
+    assert np.array_equal(np.asarray(r.state),
+                          alg.reference_label_propagation(g, labels)), "lp"
+
+    p = rng.random(g.n_vertices).astype(np.float32); p /= p.sum()
+    rp = E.engine_personalized_pagerank(eng, g.degrees(), p, iters=12)
+    np.testing.assert_allclose(
+        np.asarray(rp.state),
+        alg.reference_personalized_pagerank(g, p, iters=12), atol=1e-5)
+
+    # K=8 on a 4-device mesh (2 partition blocks per device)
+    mesh4 = jax.make_mesh((4,), ("parts",))
+    r4 = E.engine_label_propagation(E.Engine(plan, mesh=mesh4), labels)
+    assert np.array_equal(np.asarray(r4.state), np.asarray(r.state)), "k8d4"
+
+    # edge property channel on the BATCHED shard_map path: the [E_pad, F]
+    # plane rides the replicated kwargs, sources ride the vmapped batch
+    INF = jnp.float32(jnp.inf)
+    def prepare(plan, kw):
+        return {"source": kw["source"],
+                "w": E.gather_edge_channel(plan, kw["weights"])[:, :, 0]}
+    def init(plan, ctx):
+        hit = plan.vmask & (plan.local2global == ctx["source"])
+        return jnp.where(hit, 0.0, INF)
+    def fin(glob, present, plan, ctx):
+        iota = jnp.arange(plan.n_vertices)
+        return jnp.where(present, glob,
+                         jnp.where(iota == ctx["source"], 0.0, INF))
+    CW = E.EdgeProgram(name="cwsssp", mode="replica", combine="min",
+        prepare=prepare, init=init, pre=lambda s, c: s,
+        apply=lambda o, a, c: jnp.minimum(o, a), finalize=fin,
+        local_fixpoint=True, edge=lambda m, plan, ctx: m + ctx["w"])
+    u, v = g.as_numpy()
+    w = np.zeros(g.e_pad, np.float32)
+    w[:len(u)] = edge_weights(u, v)
+    rb = eng.run_batched(CW, {"source": np.array([1, 7], np.int32)},
+                         weights=w)
+    for i, s in enumerate((1, 7)):
+        assert np.array_equal(np.asarray(rb.state[i]),
+                              alg.reference_weighted_sssp(g, s)), s
+    print("ENGINE_DIST_CHANNELS_OK")
+""")
+
+
 def _run_subprocess(script: str, marker: str) -> None:
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
@@ -129,3 +195,10 @@ def test_engine_shard_map():
 def test_engine_shard_map_batched():
     """run_batched on a mesh: the lifted single-device restriction."""
     _run_subprocess(BATCHED_SCRIPT, "ENGINE_DIST_BATCHED_OK")
+
+
+@pytest.mark.slow
+def test_engine_shard_map_channels():
+    """Property channels on both shard_map paths: vertex planes through
+    dispatch, an edge plane through dispatch_batched."""
+    _run_subprocess(CHANNEL_SCRIPT, "ENGINE_DIST_CHANNELS_OK")

@@ -127,11 +127,13 @@ def test_keys_derive_from_normalized_params():
 def test_no_kind_string_branching_in_gserve():
     """CI-guarded invariant, enforced in tier-1 too: the serving layer
     derives everything from the registry and never branches on program-kind
-    strings."""
+    strings NOR on property-channel names/kinds — channels flow through the
+    same derived batch/cache keys and the generic channel_args call."""
     root = pathlib.Path(__file__).resolve().parents[1] / "src/repro/gserve"
     offenders = [p.name for p in sorted(root.glob("*.py"))
-                 if 'kind == "' in p.read_text()]
-    assert not offenders, f"per-kind branching found in: {offenders}"
+                 if 'kind == "' in p.read_text()
+                 or 'channel == "' in p.read_text()]
+    assert not offenders, f"per-kind/per-channel branching in: {offenders}"
 
 
 # ---------------------------------------------------------------------------
@@ -243,3 +245,408 @@ def test_patched_plan_weights_match_recompiled():
                 float(ew[p, s])
                 for p in range(plan.k) for s in np.flatnonzero(em[p])}
     assert wmap(sess.plan) == wmap(fresh)
+
+
+# ---------------------------------------------------------------------------
+# property channels: misuse matrix, key identity, layout, e2e, maintenance
+# ---------------------------------------------------------------------------
+
+import jax.numpy as _jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algorithms as alg
+from repro.core.graph import edge_weights
+from repro.engine import kernels as K
+
+
+def _small_graph(seed=0, n=120):
+    return graph.watts_strogatz(n, 4, 0.15, seed=seed)
+
+
+def _labels(n, seed=0):
+    return np.random.default_rng(seed).integers(0, 30, size=n).astype(
+        np.float32)
+
+
+def _make_cwsssp():
+    """Channel-weighted SSSP: weights arrive as an EDGE property plane in
+    graph slot order (instead of being baked into plan.edge_w) — built
+    from public pieces only, mirroring the wsssp worked example."""
+    INF = _jnp.float32(_jnp.inf)
+
+    def prepare(plan, kw):
+        return {"source": kw["source"],
+                "w": E.gather_edge_channel(plan, kw["weights"])[:, :, 0]}
+
+    def init(plan, ctx):
+        hit = plan.vmask & (plan.local2global == ctx["source"])
+        return _jnp.where(hit, 0.0, INF)
+
+    def fin(glob, present, plan, ctx):
+        iota = _jnp.arange(plan.n_vertices)
+        iso = _jnp.where(iota == ctx["source"], 0.0, INF)
+        return _jnp.where(present, glob, iso)
+
+    return E.EdgeProgram(
+        name="cwsssp", mode="replica", combine="min",
+        prepare=prepare, init=init, pre=lambda s, c: s,
+        apply=lambda o, a, c: _jnp.minimum(o, a), finalize=fin,
+        local_fixpoint=True, edge=lambda m, plan, ctx: m + ctx["w"])
+
+
+def _slot_weights(sg) -> np.ndarray:
+    """Content-hash weights laid out in graph slot order, [e_pad]."""
+    w = np.zeros(sg.e_pad, np.float32)
+    m = sg._mask
+    w[m] = edge_weights(sg._u[m], sg._v[m])
+    return w
+
+
+@pytest.fixture
+def cwsssp_registered():
+    E.register("cwsssp", _make_cwsssp(), params=[
+        E.ParamSpec("source", int, batchable=True),
+        E.ParamSpec("weights", float, role="channel", channel="edge")],
+        oracle=lambda g, source, weights: alg.reference_weighted_sssp(
+            g, source))
+    yield
+    E.unregister("cwsssp")
+
+
+def test_channel_misuse_matrix(cwsssp_registered):
+    g = _small_graph()
+    lab = _labels(g.n_vertices)
+    # unknown channel name
+    with pytest.raises(E.UnknownParamError, match="declared: labels"):
+        G.QueryRequest("labelprop", params={"labels": lab, "labelz": lab})
+    # scalar where a plane is expected
+    with pytest.raises(E.ChannelError, match="takes an array plane"):
+        G.QueryRequest("labelprop", params={"labels": 3.0})
+    # wrong rank
+    with pytest.raises(E.ChannelError, match=r"\[N\] or \[N, F\]"):
+        G.QueryRequest("labelprop", params={"labels": lab.reshape(2, -1, 1)})
+    # wrong dtype (not coercible to float32)
+    with pytest.raises(E.ParamTypeError, match="float32"):
+        G.QueryRequest("labelprop", params={"labels": np.array(["a", "b"])})
+    # feature-width mismatch against the declared F
+    with pytest.raises(E.ChannelError, match="declares 1 feature"):
+        G.QueryRequest("labelprop",
+                       params={"labels": np.zeros((g.n_vertices, 2))})
+    # [V, F] vs [E_pad, F] mix-up — both directions, typed + actionable
+    owner = baselines.hash_partition(g, 3)
+    plan = E.compile_plan(g, owner, 3)
+    lp = E.get_program("labelprop")
+    cw = E.get_program("cwsssp")
+    with pytest.raises(E.ChannelError, match="VERTEX channel"):
+        lp.channel_args(lp.normalize({"labels": np.zeros(g.e_pad)}), plan)
+    with pytest.raises(E.ChannelError, match="EDGE channel"):
+        cw.channel_args(
+            cw.normalize({"source": 0,
+                          "weights": np.zeros(g.n_vertices)}), plan)
+    # the same mix-up is shed at the server door (typed, at submit)
+    srv = G.GraphServer(E.Engine(plan), g)
+    with pytest.raises(E.ChannelError, match="VERTEX channel"):
+        srv.submit(G.QueryRequest("labelprop",
+                                  params={"labels": np.zeros(g.e_pad)}))
+
+
+def test_channel_registration_schema():
+    r = registry.ProgramRegistry()
+    with pytest.raises(E.RegistryError, match="channel="):
+        r.register("c1", E.LABELPROP,
+                   params=[E.ParamSpec("x", float, role="channel")])
+    with pytest.raises(E.RegistryError, match="dtype=float"):
+        r.register("c2", E.LABELPROP,
+                   params=[E.ParamSpec("x", int, role="channel",
+                                       channel="vertex")])
+    with pytest.raises(E.RegistryError, match="cannot be batchable"):
+        r.register("c3", E.LABELPROP,
+                   params=[E.ParamSpec("x", float, role="channel",
+                                       channel="vertex", batchable=True)])
+    with pytest.raises(E.RegistryError, match="role='channel'"):
+        r.register("c4", E.LABELPROP,
+                   params=[E.ParamSpec("x", float, channel="vertex")])
+
+
+def test_channel_value_never_aliases_caller_memory():
+    """Content-addressing contract: the frozen plane is a private copy —
+    a caller mutating its own array after construction can neither change
+    hashed content nor hit a read-only flag on its own buffer."""
+    lab = np.arange(8, dtype=np.float32)            # 1-D, already float32
+    cv = E.ChannelValue(lab)
+    assert not np.shares_memory(lab, cv.values)
+    lab[0] = 999.0                                  # caller's array stays
+    assert cv.values[0, 0] == 0.0                   # writable; plane fixed
+    assert cv == E.ChannelValue(np.arange(8))
+    plane = np.zeros((8, 2), np.float32)            # contiguous 2-D f32
+    cv2 = E.ChannelValue(plane)
+    plane[0, 0] = 1.0                               # must NOT raise
+    assert cv2.values[0, 0] == 0.0
+
+
+def test_short_edge_plane_reads_fill_not_last_row(cwsssp_registered):
+    """gather_edge_channel: a plane with fewer rows than a live slot index
+    must read the fill value, never silently clamp to the last row."""
+    import jax.numpy as jnp2
+    g = _small_graph(seed=9)
+    plan = E.compile_plan(g, baselines.hash_partition(g, 3), 3)
+    full = _slot_weights_from_graph(g)
+    short = full[: plan.edge_slot_hwm // 2]         # covers half the slots
+    got = np.asarray(E.gather_edge_channel(plan, jnp2.asarray(short)))
+    em = np.asarray(plan.emask)
+    es = np.asarray(plan.edge_slot)
+    covered = em & (es >= 0) & (es < len(short))
+    assert np.array_equal(got[covered, 0], short[es[covered]])
+    assert not got[~covered].any(), "uncovered slots must read fill (0)"
+
+
+def _slot_weights_from_graph(g) -> np.ndarray:
+    u, v = g.as_numpy()
+    w = np.zeros(g.e_pad, np.float32)
+    w[np.asarray(g.edge_mask)] = edge_weights(u, v)
+    return w
+
+
+def test_channel_content_identity_keys():
+    g = _small_graph()
+    lab = _labels(g.n_vertices, seed=1)
+    a = G.QueryRequest("labelprop", tenant="a", params={"labels": lab})
+    b = G.QueryRequest("labelprop", tenant="b",
+                       params={"labels": lab.copy()})
+    c = G.QueryRequest("labelprop", params={"labels": lab + 1.0})
+    # byte-identical planes: same digest -> shared batch/cache identity
+    assert a.batch_key() == b.batch_key()
+    assert a.cache_key() == b.cache_key()
+    # different features: two tenants NEVER share keys (hence never a
+    # cached result or a coalesced dispatch)
+    assert a.batch_key() != c.batch_key()
+    assert a.cache_key() != c.cache_key()
+    # pre-built ChannelValue ("bound once per epoch" client-side) is the
+    # same identity as the raw array
+    cv = E.ChannelValue(lab)
+    d = G.QueryRequest("labelprop", params={"labels": cv})
+    assert d.cache_key() == a.cache_key()
+
+
+def test_channel_tenants_never_share_cache():
+    g = _small_graph(seed=3)
+    owner = baselines.hash_partition(g, 3)
+    plan = E.compile_plan(g, owner, 3)
+    srv = G.GraphServer(E.Engine(plan), g)
+    la = _labels(g.n_vertices, seed=4)
+    lb = la + 100.0
+    ra = srv.serve([G.QueryRequest("labelprop", tenant="a",
+                                   params={"labels": la})])[0]
+    rb = srv.serve([G.QueryRequest("labelprop", tenant="b",
+                                   params={"labels": lb})])[0]
+    assert not rb.from_cache, "different planes must never share a result"
+    assert np.array_equal(ra.value, alg.reference_label_propagation(g, la))
+    assert np.array_equal(rb.value, alg.reference_label_propagation(g, lb))
+    # same plane, third tenant: cache hit
+    rc = srv.serve([G.QueryRequest("labelprop", tenant="c",
+                                   params={"labels": la.copy()})])[0]
+    assert rc.from_cache
+    assert np.array_equal(rc.value, ra.value)
+
+
+def test_labelprop_and_ppr_end_to_end():
+    """The acceptance flow: both flagship channel programs served through
+    partition -> engine -> stream patch -> serve, oracle-exact, with zero
+    gserve edits beyond the generic channel_args call."""
+    g = _small_graph(seed=5, n=160)
+    sess = S.StreamSession(g, S.StreamConfig(k=4, chunk_size=32,
+                                             drift_threshold=1e9), key=0)
+    srv = G.GraphServer.from_session(sess)
+    rng = np.random.default_rng(6)
+    lab = _labels(g.n_vertices, seed=6)
+    pers = rng.random(g.n_vertices).astype(np.float32)
+    pers /= pers.sum()
+    for step in range(3):
+        g_now = sess.graph()
+        rl = srv.serve([G.QueryRequest("labelprop",
+                                       params={"labels": lab})])[0]
+        assert np.array_equal(
+            rl.value, alg.reference_label_propagation(g_now, lab)), step
+        rp = srv.serve([G.QueryRequest("ppr", params={
+            "personalization": pers, "iters": 10})])[0]
+        np.testing.assert_allclose(
+            rp.value,
+            alg.reference_personalized_pagerank(g_now, pers, iters=10),
+            atol=1e-5)
+        sess.apply(inserts=rng.integers(0, g.n_vertices, size=(6, 2)))
+    srv.close()
+
+
+def test_stale_channel_hash_after_patch(cwsssp_registered):
+    """A stream patch rebinding a maintained edge plane bumps its content
+    digest: post-patch requests carry the NEW identity, so neither the
+    result cache nor the batch former can alias them with pre-patch
+    answers computed from the old plane."""
+    g = _small_graph(seed=7)
+    sess = S.StreamSession(g, S.StreamConfig(k=3, chunk_size=16,
+                                            drift_threshold=1e9), key=0)
+    sess.bind_channel("cwsssp", "weights", _slot_weights(sess.sg),
+                      fill=lambda u, v: edge_weights(np.asarray([u]),
+                                                     np.asarray([v]))[0])
+    entry = E.get_program("cwsssp")
+    srv = G.GraphServer.from_session(sess)
+    try:
+        r0 = srv.serve([G.QueryRequest("cwsssp", params={"source": 0})])[0]
+        key0 = r0.request.cache_key()
+        digest0 = entry.bindings["weights"].digest
+        assert np.array_equal(
+            r0.value, alg.reference_weighted_sssp(sess.graph(), 0))
+        sess.apply(inserts=np.array([[0, 60], [1, 70], [2, 80]]))
+        assert sess.n_patches >= 1
+        assert entry.bindings["weights"].digest != digest0, \
+            "maintained plane must re-bind with a fresh content hash"
+        r1 = srv.serve([G.QueryRequest("cwsssp", params={"source": 0})])[0]
+        assert r1.request.cache_key() != key0
+        assert not r1.from_cache
+        assert np.array_equal(
+            r1.value, alg.reference_weighted_sssp(sess.graph(), 0))
+    finally:
+        srv.close()
+        sess.unbind_channel("cwsssp", "weights")
+
+
+def test_bound_edge_channel_survives_compaction(cwsssp_registered):
+    """Compaction remaps bound edge planes by the same slot gather as the
+    owner array: results stay oracle-exact across the epoch bump."""
+    g = _small_graph(seed=8, n=100)
+    sess = S.StreamSession(g, S.StreamConfig(k=3, chunk_size=16,
+                                            drift_threshold=1e9), key=0)
+    sess.bind_channel("cwsssp", "weights", _slot_weights(sess.sg),
+                      fill=lambda u, v: edge_weights(np.asarray([u]),
+                                                     np.asarray([v]))[0])
+    try:
+        rng = np.random.default_rng(9)
+        n = 0
+        while sess.sg.epoch == 0 and n < 80:
+            sess.apply(inserts=rng.integers(0, g.n_vertices, size=(16, 2)))
+            n += 1
+        assert sess.sg.epoch >= 1, "compaction never triggered"
+        eng = sess.engine
+        r = eng.run(E.get_program("cwsssp").program, source=_jnp.int32(3),
+                    weights=np.asarray(
+                        E.get_program("cwsssp").bindings["weights"]))
+        assert np.array_equal(
+            np.asarray(r.state),
+            alg.reference_weighted_sssp(sess.graph(), 3))
+    finally:
+        sess.unbind_channel("cwsssp", "weights")
+
+
+def test_bind_channel_validation_and_ownership(cwsssp_registered):
+    """A failed bind leaves nothing installed on the registry entry, and a
+    second live session cannot clobber a maintained binding."""
+    g = _small_graph(seed=10, n=80)
+    cfg = S.StreamConfig(k=2, chunk_size=16, drift_threshold=1e9)
+    sess = S.StreamSession(g, cfg, key=0)
+    entry = E.get_program("cwsssp")
+    with pytest.raises(E.ChannelError, match="edge slots"):
+        sess.bind_channel("cwsssp", "weights",
+                          np.zeros(sess.sg.e_pad + 64, np.float32))
+    assert "weights" not in entry.bindings, \
+        "failed bind must not leave a plane live for normalize()"
+    sess.bind_channel("cwsssp", "weights", _slot_weights(sess.sg))
+    sess2 = S.StreamSession(g, cfg, key=0)
+    try:
+        with pytest.raises(E.ChannelError, match="another live"):
+            sess2.bind_channel("cwsssp", "weights",
+                               _slot_weights(sess2.sg))
+        # ...nor may a non-owner RELEASE the owner's binding
+        with pytest.raises(E.ChannelError, match="only its owner"):
+            sess2.unbind_channel("cwsssp", "weights")
+        assert "weights" in entry.bindings
+        sess.unbind_channel("cwsssp", "weights")
+        sess2.bind_channel("cwsssp", "weights", _slot_weights(sess2.sg))
+    finally:
+        sess2.unbind_channel("cwsssp", "weights")
+
+
+def test_channel_plane_invalidated_by_swap_fails_soft(cwsssp_registered):
+    """A plane validated at submit can be invalidated by a plan swap that
+    lands before its batch is popped (live-slot high-water mark grows past
+    it). That must fail the REQUEST (typed error result), not the drain
+    pipeline — the server keeps serving."""
+    g = _small_graph(seed=12, n=100)
+    sess = S.StreamSession(g, S.StreamConfig(k=3, chunk_size=16,
+                                            drift_threshold=1e9), key=0)
+    srv = G.GraphServer.from_session(sess)
+    plane = _slot_weights(sess.sg)[: sess.plan.edge_slot_hwm]  # valid NOW
+    rid = srv.submit(G.QueryRequest("cwsssp",
+                                    params={"source": 0, "weights": plane}))
+    sess.apply(inserts=np.array([[0, 50], [1, 60]]))   # hwm grows past it
+    srv.drain()
+    r = srv.result(rid)
+    assert r is not None and r.value is None
+    assert r.error and "EDGE channel" in r.error
+    ok = srv.serve([G.QueryRequest("cwsssp", params={
+        "source": 0, "weights": _slot_weights(sess.sg)})])[0]
+    assert ok.error is None
+    assert np.array_equal(ok.value,
+                          alg.reference_weighted_sssp(sess.graph(), 0))
+    srv.close()
+
+
+def test_gc_session_releases_binding(cwsssp_registered):
+    """A session dropped without unbind_channel must not leave its stale
+    plane live on the process-global registry entry."""
+    import gc
+    g = _small_graph(seed=13, n=80)
+    sess = S.StreamSession(g, S.StreamConfig(k=2, chunk_size=16,
+                                            drift_threshold=1e9), key=0)
+    sess.bind_channel("cwsssp", "weights", _slot_weights(sess.sg))
+    entry = E.get_program("cwsssp")
+    assert "weights" in entry.bindings
+    del sess
+    gc.collect()
+    assert "weights" not in entry.bindings, \
+        "a dead maintainer's plane must not resolve for new requests"
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_channel_gather_padding_invariant(seed):
+    """Padding-identity property for the channel gathers: the laid-out
+    planes (and the program results through them) are invariant to how
+    much slack/padding the plan reserves and how far the external plane
+    is zero-padded beyond the live rows."""
+    rng = np.random.default_rng(seed)
+    g = graph.watts_strogatz(80 + seed % 17, 4, 0.2, seed=seed % 5)
+    owner = baselines.hash_partition(g, 3)
+    lean = E.compile_plan(g, owner, 3)
+    fat = E.compile_plan(g, owner, 3,
+                         edge_slack=1 + seed % 40,
+                         vertex_slack=1 + (seed // 7) % 30)
+
+    # vertex plane, F=3
+    vf = rng.random((g.n_vertices, 3)).astype(np.float32)
+    for plan in (lean, fat):
+        got = np.asarray(K.gather_vertex_channel(plan, _jnp.asarray(vf)))
+        l2g = np.asarray(plan.local2global)
+        vm = np.asarray(plan.vmask)
+        assert np.array_equal(got[vm], vf[l2g[vm]])
+        assert not got[~vm].any(), "slack/pad slots must be pinned to 0"
+
+    # edge plane in slot order, padded two different amounts
+    u, v = g.as_numpy()
+    ew = np.zeros(g.e_pad, np.float32)
+    ew[np.asarray(g.edge_mask)] = edge_weights(u, v)
+    ew_long = np.concatenate([ew, np.zeros(64, np.float32)])
+    ref = None
+    for plan in (lean, fat):
+        for plane in (ew, ew_long):
+            got = np.asarray(K.gather_edge_channel(plan,
+                                                   _jnp.asarray(plane)))
+            em = np.asarray(plan.emask)
+            # live half-edges read their undirected edge's weight
+            assert np.allclose(got[em, 0],
+                               np.asarray(plan.edge_w)[em])
+            assert not got[~em].any()
+    # end-to-end: the engine result through either plan is identical
+    r_lean = E.engine_label_propagation(E.Engine(lean), vf[:, 0])
+    r_fat = E.engine_label_propagation(E.Engine(fat), vf[:, 0])
+    assert np.array_equal(np.asarray(r_lean.state), np.asarray(r_fat.state))

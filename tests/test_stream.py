@@ -114,6 +114,20 @@ def test_patch_matches_fresh_compile_metrics():
     want = np.unique(np.stack(g2.as_numpy(), 1), axis=0)
     got = np.unique(np.concatenate(sess.plan.local_edges(), 0), axis=0)
     assert np.array_equal(want, got)
+    # property-channel index plane: the patched edge_slot mapping per
+    # (partition, global endpoints) half-edge equals a fresh compile's —
+    # external [E_pad, F] planes read identically through either plan
+    def slot_map(plan):
+        l2g = np.asarray(plan.local2global)
+        tgt = np.asarray(plan.edge_tgt)
+        nbr = np.asarray(plan.edge_nbr)
+        em = np.asarray(plan.emask)
+        es = np.asarray(plan.edge_slot)
+        return {(p, int(l2g[p, tgt[p, s]]), int(l2g[p, nbr[p, s]])):
+                int(es[p, s])
+                for p in range(plan.k) for s in np.flatnonzero(em[p])}
+    assert slot_map(sess.plan) == slot_map(fresh)
+    assert sess.plan.edge_slot_hwm == fresh.edge_slot_hwm
 
 
 def test_patch_exhaustion_raises_and_leaves_plan_usable():
