@@ -27,19 +27,98 @@ Registering a new program therefore makes it servable end-to-end with
 zero serving-layer edits — see "Registering your own program" in
 src/repro/engine/README.md, with weighted SSSP as the worked example.
 All misuse raises the typed errors in ``engine.errors``.
+
+**Property channels** (``role="channel"``): a program may declare named
+external feature planes — per-vertex ``[V, F]`` or per-edge ``[E_pad, F]``
+in graph edge-slot order — supplied at query time as arrays (or bound once
+per epoch via ``bind_channel``).  Values are wrapped in content-addressed
+``ChannelValue``s whose sha256 digest folds into the derived batch/cache
+keys, so feature-dependent results never alias across tenants; at dispatch
+``ProgramEntry.channel_args`` validates each plane against the concrete
+plan and the program's ``prepare`` gathers it to partition-local padded
+buffers (``engine.kernels.gather_vertex_channel`` /
+``gather_edge_channel``).  Label propagation over external labels and
+personalized PageRank register this way (engine/programs.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import numbers
 from typing import Any, Callable, Mapping
 
-from .errors import (BatchAxisError, DuplicateProgramError, ParamTypeError,
-                     RegistryError, UnknownParamError, UnknownProgramError)
+import numpy as np
+
+from .errors import (BatchAxisError, ChannelError, DuplicateProgramError,
+                     ParamTypeError, RegistryError, UnknownParamError,
+                     UnknownProgramError)
 
 _REQUIRED = object()        # sentinel: ParamSpec without a default
 _DTYPES = (int, float)
-_ROLES = ("ctx", "supersteps")
+_ROLES = ("ctx", "supersteps", "channel")
+_CHANNELS = ("vertex", "edge")
+
+
+class ChannelValue:
+    """One immutable, content-addressed property plane.
+
+    Wraps a frozen float32 array — ``[V, F]`` for vertex channels, or
+    ``[E_pad, F]`` in *graph edge-slot order* for edge channels — together
+    with a sha256 digest of its contents.  Equality and hashing go through
+    the digest, so a ``ChannelValue`` drops straight into the registry's
+    derived ``batch_key``/``cache_key`` tuples: two tenants submitting
+    byte-identical feature planes coalesce and share cached results, two
+    tenants with *different* features never do — without the serving layer
+    knowing channels exist.
+
+    Construct once and reuse across requests ("bound once per epoch"
+    client-side): the digest is computed a single time here, never per
+    request.  ``np.asarray(cv)`` recovers the plane (oracles use this).
+    """
+
+    __slots__ = ("values", "digest")
+
+    def __init__(self, values):
+        try:
+            # np.array (not asarray): ALWAYS copy, so the frozen plane can
+            # never alias the caller's array — a caller mutating its own
+            # buffer after construction must not change content the digest
+            # already hashed, and freezing must not poison the caller
+            v = np.array(values, np.float32)
+        except (TypeError, ValueError) as e:
+            raise ParamTypeError(
+                f"channel values must be numeric arrays coercible to "
+                f"float32, got {type(values).__name__}: {e}") from e
+        if v.ndim == 1:
+            v = v[:, None]
+        if v.ndim != 2 or v.shape[0] == 0:
+            raise ChannelError(
+                f"a channel plane is a non-empty [N] or [N, F] array, got "
+                f"shape {tuple(v.shape)}")
+        v = np.ascontiguousarray(v)
+        v.flags.writeable = False
+        self.values = v
+        h = hashlib.sha256()
+        h.update(np.int64(v.shape[0]).tobytes())
+        h.update(np.int64(v.shape[1]).tobytes())
+        h.update(v.tobytes())
+        self.digest = h.hexdigest()
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(self.values.shape)
+
+    def __array__(self, dtype=None):
+        return self.values if dtype is None else self.values.astype(dtype)
+
+    def __eq__(self, other):
+        return isinstance(other, ChannelValue) and self.digest == other.digest
+
+    def __hash__(self):
+        return hash(self.digest)
+
+    def __repr__(self):
+        return f"ChannelValue(shape={self.shape}, {self.digest[:12]}…)"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,9 +135,18 @@ class ParamSpec:
                  one vmapped dispatch.  At most one per program.
     role       — "ctx": forwarded into the program's traced ``ctx`` via
                  engine kwargs; "supersteps": consumed host-side as the
-                 superstep cap (``max_supersteps``).
+                 superstep cap (``max_supersteps``); "channel": an external
+                 property plane (see below).
     validate   — optional callback run on the coerced value; raise
                  ``ValueError`` to reject.
+    channel    — for role="channel": "vertex" (a global ``[V, F]`` plane)
+                 or "edge" (an ``[E_pad, F]`` plane in graph edge-slot
+                 order).  Values arrive as arrays (or pre-built
+                 ``ChannelValue``); they are content-hashed into batch and
+                 cache keys and laid out against the partition plan by
+                 ``ProgramEntry.channel_args`` at dispatch.
+    features   — declared feature width F of a channel plane (static, so
+                 every query of the program jits to one cache entry).
     """
     name: str
     dtype: type = int
@@ -66,6 +154,8 @@ class ParamSpec:
     batchable: bool = False
     role: str = "ctx"
     validate: Callable[[Any], None] | None = None
+    channel: str | None = None
+    features: int = 1
 
     @property
     def required(self) -> bool:
@@ -73,6 +163,8 @@ class ParamSpec:
 
     def coerce(self, program: str, value: Any) -> Any:
         """Validate + coerce one value; raises the typed errors."""
+        if self.role == "channel":
+            return self._coerce_channel(program, value)
         if isinstance(value, (list, tuple, set)) \
                 or getattr(value, "ndim", 0) > 0:
             if self.batchable:
@@ -103,6 +195,24 @@ class ParamSpec:
             self.validate(value)
         return value
 
+    def _coerce_channel(self, program: str, value: Any) -> "ChannelValue":
+        if np.isscalar(value) or getattr(value, "ndim", None) == 0:
+            raise ChannelError(
+                f"{program}.{self.name} is a {self.channel} property "
+                f"channel and takes an array plane "
+                f"({'[V, F]' if self.channel == 'vertex' else '[E_pad, F]'}"
+                f" with F={self.features}), got a scalar "
+                f"{type(value).__name__}")
+        cv = value if isinstance(value, ChannelValue) else ChannelValue(value)
+        if cv.values.shape[1] != self.features:
+            raise ChannelError(
+                f"{program}.{self.name} declares {self.features} "
+                f"feature(s) per {self.channel}, got a plane of shape "
+                f"{cv.shape} — reshape to [N, {self.features}]")
+        if self.validate is not None:
+            self.validate(cv)
+        return cv
+
 
 @dataclasses.dataclass(frozen=True)
 class ProgramEntry:
@@ -118,6 +228,12 @@ class ProgramEntry:
                                                 #   derived per snapshot
     oracle: Callable | None = None              # oracle(graph, **params)
     oracle_atol: float = 0.0                    # 0.0 -> bit-identical
+    # live channel bindings: param name -> ChannelValue, set through
+    # bind_channel ("bound once per epoch") and consulted by normalize for
+    # requests that omit the channel. Mutable contents on a frozen entry —
+    # excluded from equality, never part of the schema.
+    bindings: dict = dataclasses.field(default_factory=dict, compare=False,
+                                       repr=False)
 
     # -- schema accessors ----------------------------------------------------
     @property
@@ -130,6 +246,10 @@ class ProgramEntry:
     @property
     def batchable(self) -> bool:
         return self.batch_param is not None
+
+    @property
+    def channel_params(self) -> tuple[ParamSpec, ...]:
+        return tuple(p for p in self.params if p.role == "channel")
 
     def spec(self, name: str) -> ParamSpec:
         for p in self.params:
@@ -152,6 +272,10 @@ class ProgramEntry:
             if spec.name in params:
                 out[spec.name] = spec.coerce(self.name,
                                              params.pop(spec.name))
+            elif spec.role == "channel" and spec.name in self.bindings:
+                # a bound plane (bind_channel) stands in for the omitted
+                # param — already coerced, digest already folded into keys
+                out[spec.name] = self.bindings[spec.name]
             elif spec.required:
                 raise ParamTypeError(
                     f"program {self.name!r} requires parameter "
@@ -180,6 +304,81 @@ class ProgramEntry:
         """Non-batchable role="ctx" params, forwarded as engine kwargs."""
         return {p.name: params[p.name] for p in self.params
                 if p.role == "ctx" and not p.batchable}
+
+    # -- property channels ---------------------------------------------------
+    def bind_channel(self, name: str, values) -> "ChannelValue":
+        """Bind a plane once per epoch: requests that omit the channel
+        param then resolve to this value at construction (and inherit its
+        content digest in their batch/cache keys). Rebinding replaces the
+        plane; a new digest is a new query identity, so results computed
+        from the old plane are never served for the new one."""
+        spec = self.spec(name)
+        if spec.role != "channel":
+            raise ChannelError(
+                f"{self.name}.{name} has role={spec.role!r}, not 'channel' "
+                "— only property channels can be bound")
+        cv = spec.coerce(self.name, values)
+        self.bindings[name] = cv
+        return cv
+
+    def unbind_channel(self, name: str) -> None:
+        self.bindings.pop(name, None)
+
+    def validate_channels(self, params: Mapping[str, Any], plan
+                          ) -> dict[str, "ChannelValue"]:
+        """Pure shape validation of the request's channel planes against a
+        concrete plan — no layout work, cheap enough for the serving
+        admission path.  A vertex plane must be ``[V, F]``; an edge plane
+        ``[n, F]`` in graph edge-slot order with n covering every live
+        slot and not exceeding the plan's static slot capacity.  Returns
+        the coerced ``ChannelValue`` per param name."""
+        out: dict[str, ChannelValue] = {}
+        for spec in self.channel_params:
+            cv = params[spec.name]
+            if not isinstance(cv, ChannelValue):    # direct engine users
+                cv = spec.coerce(self.name, cv)
+            n = cv.values.shape[0]
+            if spec.channel == "vertex":
+                if n != plan.n_vertices:
+                    raise ChannelError(
+                        f"{self.name}.{spec.name} is a VERTEX channel: "
+                        f"expected [{plan.n_vertices}, {spec.features}] "
+                        f"(one row per vertex), got {cv.shape} — an edge "
+                        f"plane would be [{plan.e_slots}, {spec.features}] "
+                        "in graph edge-slot order; did you mix them up?")
+            else:
+                need, cap = plan.edge_slot_hwm, plan.e_slots
+                if n < need or n > cap:
+                    raise ChannelError(
+                        f"{self.name}.{spec.name} is an EDGE channel: "
+                        f"expected [n, {spec.features}] rows in graph "
+                        f"edge-slot order with {need} <= n <= {cap} (live "
+                        f"slots .. padded capacity), got {cv.shape} — a "
+                        f"vertex plane would be [{plan.n_vertices}, "
+                        f"{spec.features}]; did you mix them up?")
+            out[spec.name] = cv
+        return out
+
+    def channel_args(self, params: Mapping[str, Any], plan) -> dict[str, Any]:
+        """Lay the request's channel planes out against ``plan`` and return
+        them as engine kwargs (the program's ``prepare`` gathers them to
+        partition-local ``[K, Vmax, F]`` / ``[K, Emax, F]`` buffers via
+        ``kernels.gather_vertex_channel`` / ``gather_edge_channel``).
+
+        Validates via ``validate_channels``; edge planes shorter than the
+        plan's static slot capacity (e.g. exactly ``[E, F]`` on a freshly
+        built graph) are zero-padded up to it so jit caches stay warm.
+        """
+        out: dict[str, Any] = {}
+        for spec, cv in zip(self.channel_params,
+                            self.validate_channels(params, plan).values()):
+            vals = cv.values
+            if spec.channel == "edge" and vals.shape[0] < plan.e_slots:
+                pad = np.zeros((plan.e_slots - vals.shape[0],
+                                vals.shape[1]), np.float32)
+                vals = np.concatenate([vals, pad], axis=0)
+            out[spec.name] = vals
+        return out
 
     def batch_key_of(self, params: Mapping[str, Any]) -> tuple:
         """Requests sharing a batch key may be answered by one dispatch:
@@ -240,6 +439,31 @@ class ProgramRegistry:
                 raise RegistryError(
                     f"program {name!r}: parameter {p.name!r} role must be "
                     f"one of {_ROLES}, got {p.role!r}")
+            if p.role == "channel":
+                if p.channel not in _CHANNELS:
+                    raise RegistryError(
+                        f"program {name!r}: channel parameter {p.name!r} "
+                        f"must set channel= to one of {_CHANNELS}, got "
+                        f"{p.channel!r}")
+                if p.dtype is not float:
+                    raise RegistryError(
+                        f"program {name!r}: channel parameter {p.name!r} "
+                        "carries a float32 plane — declare dtype=float")
+                if p.batchable:
+                    raise RegistryError(
+                        f"program {name!r}: channel parameter {p.name!r} "
+                        "cannot be batchable — one plane is shared by the "
+                        "whole micro-batch (its content hash is part of "
+                        "the batch key)")
+                if int(p.features) < 1:
+                    raise RegistryError(
+                        f"program {name!r}: channel parameter {p.name!r} "
+                        f"needs features >= 1, got {p.features}")
+            elif p.channel is not None:
+                raise RegistryError(
+                    f"program {name!r}: parameter {p.name!r} sets "
+                    f"channel={p.channel!r} but role={p.role!r} — channel "
+                    "planes must declare role='channel'")
             if p.batchable:
                 batchable.append(p)
                 if p.role != "ctx":
@@ -307,6 +531,16 @@ def unregister(name: str) -> None:
 
 def get_program(name: str) -> ProgramEntry:
     return DEFAULT_REGISTRY.get(name)
+
+
+def bind_channel(program: str, param: str, values) -> ChannelValue:
+    """Bind a property plane on a default-registry program (the public
+    "bound once per epoch" entry point; see ProgramEntry.bind_channel)."""
+    return DEFAULT_REGISTRY.get(program).bind_channel(param, values)
+
+
+def unbind_channel(program: str, param: str) -> None:
+    DEFAULT_REGISTRY.get(program).unbind_channel(param)
 
 
 def program_names() -> list[str]:
