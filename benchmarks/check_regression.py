@@ -3,7 +3,7 @@ committed baselines in experiments/bench/ and fail on regression.
 
     python benchmarks/check_regression.py \
         --baseline experiments/bench --fresh /tmp/bench-fresh \
-        [--tol 0.2] [--tol-perf 0.5]
+        [--tol 0.2] [--tol-perf 0.5] [--tolerances PATH]
 
 Policy (per leaf value, walking the JSON trees in lockstep):
 
@@ -35,6 +35,28 @@ Policy (per leaf value, walking the JSON trees in lockstep):
     listed in the report; ``--strict-seconds`` compares them one-sided
     (slower fails) at ``--tol-perf``.
 
+Per-metric overrides — ``tolerances.json``
+------------------------------------------
+The key-substring heuristics above cannot express every contract (e.g.
+"the obs recorder's serving overhead must stay under an ABSOLUTE 3%,
+regardless of what the baseline happened to measure").  A checked-in
+``<baseline>/tolerances.json`` (auto-loaded when present; ``--tolerances``
+points elsewhere) carries per-metric rules matched by ``fnmatch`` pattern
+against the full JSON path (``BENCH_obs.overhead_frac``,
+``BENCH_serve.rows[*].qps``).  The FIRST matching override wins and
+replaces the default policy for that leaf:
+
+  * ``{"pattern": P, "mode": "skip"}`` — never compared (listed);
+  * ``{"mode": "ceiling", "limit": L}`` — fresh value must be <= L,
+    an absolute budget independent of the baseline;
+  * ``{"mode": "floor", "limit": L}`` — fresh value must be >= L;
+  * ``{"mode": "rel", "tol": T}`` — symmetric relative tolerance T
+    against the baseline (overrides the key-based default);
+  * ``{"mode": "higher_better", "tol": T}`` — one-sided: only a drop
+    below ``baseline * (1 - T)`` fails.
+
+Each entry may carry a ``"why"`` string — documentation, ignored here.
+
 Exit status 0 = green, 1 = regression (each one printed with its JSON
 path, baseline and fresh values).  Regenerating the committed baselines is
 ``REPRO_BENCH_OUT=experiments/bench python -m benchmarks.run`` under the
@@ -43,11 +65,13 @@ CI environment (see .github/workflows/ci.yml bench-smoke).
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import json
 import pathlib
 import sys
 
 _SECONDS_HINTS = ("wall", "warmup", "latency")
+_OVERRIDE_MODES = ("skip", "ceiling", "floor", "rel", "higher_better")
 _HIGHER_BETTER_HINTS = ("qps", "speedup")
 _SHAPE_HINTS = ("batches", "occupancy", "pad_waste")
 
@@ -84,7 +108,72 @@ class Report:
         self.notes.append(msg)
 
 
+def load_tolerances(path: pathlib.Path) -> list[dict]:
+    """Parse and validate tolerances.json; malformed entries are a config
+    error (exit 1), not a silently ignored rule."""
+    doc = json.loads(path.read_text())
+    overrides = doc.get("overrides", [])
+    for i, o in enumerate(overrides):
+        where = f"{path}:overrides[{i}]"
+        if "pattern" not in o:
+            raise SystemExit(f"ERROR: {where}: missing 'pattern'")
+        mode = o.get("mode")
+        if mode not in _OVERRIDE_MODES:
+            raise SystemExit(f"ERROR: {where}: mode {mode!r} not one of "
+                             f"{_OVERRIDE_MODES}")
+        if mode in ("ceiling", "floor") and "limit" not in o:
+            raise SystemExit(f"ERROR: {where}: mode {mode!r} needs 'limit'")
+        if mode in ("rel", "higher_better") and "tol" not in o:
+            raise SystemExit(f"ERROR: {where}: mode {mode!r} needs 'tol'")
+    return overrides
+
+
+def _override_for(path: str, overrides: list[dict]) -> dict | None:
+    for o in overrides:
+        if fnmatch.fnmatchcase(path, o["pattern"]):
+            return o
+    return None
+
+
+def _apply_override(o: dict, base, fresh, path: str, rep: Report) -> None:
+    """One leaf under an explicit per-metric rule (default policy bypassed)."""
+    mode = o["mode"]
+    if mode == "skip":
+        rep.skip(f"{path}: override skip ({base!r} -> {fresh!r})")
+        return
+    fv = float(fresh)
+    if mode == "ceiling":
+        limit = float(o["limit"])
+        if fv > limit:
+            rep.error(f"{path}: {fresh} exceeds absolute ceiling {limit} "
+                      f"(override {o['pattern']!r})")
+        return
+    if mode == "floor":
+        limit = float(o["limit"])
+        if fv < limit:
+            rep.error(f"{path}: {fresh} below absolute floor {limit} "
+                      f"(override {o['pattern']!r})")
+        return
+    bv = float(base)
+    rel = (fv - bv) / max(abs(bv), 1e-9)
+    tol = float(o["tol"])
+    if mode == "rel":
+        if abs(rel) > tol:
+            rep.error(f"{path}: {base} -> {fresh} (rel change {abs(rel):.1%}"
+                      f" > override tolerance {tol:.0%})")
+        return
+    if -rel > tol:                                 # higher_better
+        rep.error(f"{path}: {base} -> {fresh} (worse by {-rel:.1%} > "
+                  f"override tolerance {tol:.0%})")
+
+
 def _compare(base, fresh, path: str, key: str, args, rep: Report) -> None:
+    # a skip override silences a whole subtree (variable-length diagnostic
+    # lists, machine-specific records); value overrides apply at leaves
+    ov = _override_for(path, args.overrides)
+    if ov is not None and ov["mode"] == "skip":
+        _apply_override(ov, base, fresh, path, rep)
+        return
     if isinstance(base, dict):
         if not isinstance(fresh, dict):
             rep.error(f"{path}: baseline is an object, fresh is "
@@ -111,6 +200,16 @@ def _compare(base, fresh, path: str, key: str, args, rep: Report) -> None:
             return
         for i, (b, f) in enumerate(zip(base, fresh)):
             _compare(b, f, f"{path}[{i}]", key, args, rep)
+        return
+    # leaf: an explicit per-metric override replaces the default policy
+    if ov is not None:
+        if all(isinstance(v, (int, float)) and not isinstance(v, bool)
+               for v in (base, fresh)):
+            _apply_override(ov, base, fresh, path, rep)
+            return
+        rep.error(f"{path}: override {ov['pattern']!r} (mode "
+                  f"{ov['mode']!r}) targets a non-numeric leaf "
+                  f"({base!r} -> {fresh!r})")
         return
     if base is None or fresh is None:
         if base is not fresh:
@@ -163,10 +262,24 @@ def main(argv=None) -> int:
     ap.add_argument("--strict-seconds", action="store_true",
                     help="also gate wall-clock seconds keys at --tol-perf "
                          "instead of skipping them")
+    ap.add_argument("--tolerances", default=None,
+                    help="per-metric override file (default: "
+                         "<baseline>/tolerances.json when present)")
     args = ap.parse_args(argv)
 
     base_dir = pathlib.Path(args.baseline)
     fresh_dir = pathlib.Path(args.fresh)
+    tol_path = (pathlib.Path(args.tolerances) if args.tolerances
+                else base_dir / "tolerances.json")
+    if tol_path.exists():
+        args.overrides = load_tolerances(tol_path)
+        print(f"loaded {len(args.overrides)} per-metric override(s) "
+              f"from {tol_path}")
+    elif args.tolerances:
+        print(f"ERROR: --tolerances {tol_path} does not exist")
+        return 1
+    else:
+        args.overrides = []
     fresh_files = sorted(fresh_dir.glob("BENCH_*.json"))
     if not fresh_files:
         print(f"ERROR: no fresh BENCH_*.json under {fresh_dir}")

@@ -31,7 +31,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6,fig7,fig8,fig9,fig10,"
-                         "stream,serve,serve_mesh,programs,kernels")
+                         "stream,serve,serve_mesh,programs,obs,kernels")
     ap.add_argument("--all", action="store_true",
                     help="run every registered benchmark (the default when "
                          "--only is absent; the two flags are exclusive)")
@@ -44,9 +44,11 @@ def main() -> None:
         os.environ.setdefault("REPRO_BENCH_SAMPLES", "2")
 
     # imports AFTER env so common.py picks the scales up
+    from repro import obs
     from . import (fig5_k_sweep, fig6_diameter, fig7_comparison,
-                   fig8_scalability, fig9_sssp, fig10_engine, fig_programs,
-                   fig_serve, fig_serve_mesh, fig_stream, kernel_bench)
+                   fig8_scalability, fig9_sssp, fig10_engine, fig_obs,
+                   fig_programs, fig_serve, fig_serve_mesh, fig_stream,
+                   kernel_bench)
 
     all_benches = {
         "fig5": fig5_k_sweep.main,
@@ -59,6 +61,7 @@ def main() -> None:
         "serve": fig_serve.main,
         "serve_mesh": fig_serve_mesh.main,
         "programs": fig_programs.main,
+        "obs": fig_obs.main,
         "kernels": kernel_bench.main,
     }
     # registry completeness: every benchmark module on disk must be wired
@@ -77,9 +80,16 @@ def main() -> None:
     if unknown:
         ap.error(f"unknown benchmark(s) {','.join(unknown)}; "
                  f"available: {','.join(all_benches)}")
+    # the recorder stays ON across the whole run so the summary table can
+    # attribute events per figure; lifetime counts survive the per-figure
+    # reset()s some benchmarks perform (fig_obs), so deltas stay correct
+    rec = obs.get()
+    rec.enable()
     failures: list[str] = []
+    summary: list[tuple[str, str, float, int]] = []
     for name in only:
         t0 = time.time()
+        ev0 = rec.stats()["recorded"]
         print(f"\n### running {name} ...", flush=True)
         try:
             all_benches[name]()
@@ -88,8 +98,18 @@ def main() -> None:
             failures.append(name)
             print(f"### {name} FAILED after {time.time()-t0:.1f}s",
                   flush=True)
+            status = "FAILED"
         else:
             print(f"### {name} done in {time.time()-t0:.1f}s", flush=True)
+            status = "ok"
+        rec.enable()       # re-arm in case the benchmark disabled it
+        summary.append((name, status, time.time() - t0,
+                        rec.stats()["recorded"] - ev0))
+
+    print("\n### summary (obs recorder: events emitted per figure)")
+    print(f"{'figure':<12} {'status':<8} {'wall_s':>8} {'events':>8}")
+    for name, status, wall, n_events in summary:
+        print(f"{name:<12} {status:<8} {wall:>8.1f} {n_events:>8}")
     if failures:
         print(f"\n### {len(failures)} benchmark(s) crashed: "
               f"{', '.join(failures)}", flush=True)

@@ -50,6 +50,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs as _obs
 from ..core.graph import Graph, edge_weights
 
 
@@ -267,6 +268,13 @@ def compile_plan(g: Graph, owner, k: int, *, edge_slack: int = 0,
     # replica exchange plan ------------------------------------------------
     replicated, is_master = replica_masks(l2g, vmask, g.n_vertices, k)
 
+    rec = _obs.get()
+    if rec.enabled:
+        rec.counter("plan.compiles")
+        rec.event("plan.compile", k=int(k), epoch=int(epoch),
+                  n_vertices=int(g.n_vertices), v_max=int(v_max),
+                  e_max=int(e_max), edge_slack=int(edge_slack),
+                  vertex_slack=int(vertex_slack))
     return PartitionPlan(
         k=int(k), n_vertices=int(g.n_vertices), v_max=int(v_max),
         e_max=int(e_max), epoch=int(epoch), e_slots=int(g.e_pad),
@@ -340,6 +348,12 @@ def plan_cache_stats() -> dict:
     """Snapshot of the plan cache's hit/miss/eviction counters + size."""
     return dict(_PLAN_CACHE_COUNTERS, size=len(_PLAN_CACHE),
                 max_size=_PLAN_CACHE_MAX)
+
+
+# rebased onto the observability layer: obs.snapshot() always includes the
+# live plan-cache counters, one level of the cache hierarchy (result cache
+# -> plan cache -> jit cache -> device) in a single record
+_obs.get().register_provider("plan_cache", plan_cache_stats)
 
 
 def plan_cache_clear(reset_counters: bool = False) -> None:

@@ -37,15 +37,18 @@ formation with device execution (``jax.block_until_ready`` on completion).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import obs as _obs
 from . import kernels
 from .errors import WarmStateError
 from .plan import PartitionPlan
@@ -55,7 +58,15 @@ from .plan import PartitionPlan
 # The streaming tests assert it stays flat across plan patches — patched
 # plans keep the same treedef/avals and must reuse the warm cache; only a
 # compaction epoch (new static aux) is allowed to retrace.
+# The counter is folded into repro.obs: each bump also records an
+# ``engine.retrace`` event on the process recorder, attributed to the plan
+# epoch, padded shapes, and (via the dispatch sites' ambient tags) the
+# program and bucket shape that triggered it — an unexpected retrace in a
+# trace export is a visible, attributable event, not a silent bump.
 TRACE_COUNTER = {"run_loop": 0}
+
+_obs.get().register_provider(
+    "jit", lambda: {"run_loop_traces": TRACE_COUNTER["run_loop"]})
 
 
 class EdgeProgram(NamedTuple):
@@ -131,8 +142,20 @@ class PendingResult:
         state, supersteps, local_iters, converged = \
             jax.block_until_ready(self._arrays)
         ex = self.exchange_per_superstep
+        steps = int(jnp.max(supersteps))
+        rec = _obs.get()
+        if rec.enabled:   # per-dispatch superstep + exchange accounting
+            # numpy on the already-synced host arrays: a jnp reduction here
+            # would dispatch a fresh XLA computation per served result and
+            # show up as recorder overhead
+            rec.event("engine.result", supersteps=steps,
+                      local_iters=int(np.max(np.asarray(local_iters))),
+                      converged=bool(np.all(np.asarray(converged))),
+                      exchange_per_superstep=ex, exchanged=steps * ex)
+            rec.counter("engine.supersteps", steps)
+            rec.counter("engine.exchanged", steps * ex)
         return EngineResult(state, supersteps, local_iters, converged, ex,
-                            int(jnp.max(supersteps)) * ex)
+                            steps * ex)
 
 
 def _ident(combine: str) -> float:
@@ -214,6 +237,12 @@ def _run_loop(plan: PartitionPlan, prog: EdgeProgram, kw: dict,
     jit cache entry and the branch below is resolved at trace time.
     """
     TRACE_COUNTER["run_loop"] += 1
+    rec = _obs.get()
+    if rec.enabled:   # trace-time only: never runs on a warm jit cache hit
+        rec.counter("engine.retraces")
+        rec.event("engine.retrace", loop="run_loop", program=prog.name,
+                  epoch=plan.epoch, k=plan.k, v_max=plan.v_max,
+                  e_max=plan.e_max, sharded=axis is not None)
     ctx = prog.prepare(plan, kw)
     if prev is None:
         state0 = prog.init(plan, ctx)
@@ -380,6 +409,26 @@ class Engine:
                 "(the previous epoch's finalized result state)")
         return prev
 
+    def _obs_dispatch(self, prog: EdgeProgram, bucket: int):
+        """Per-dispatch telemetry: records the dispatch event (program,
+        bucket, plan epoch, exchange volume, lane occupancy) and returns an
+        ambient-tag context so any jit retrace triggered while tracing
+        inside it is attributed to this program + bucket shape."""
+        rec = _obs.get()
+        if not rec.enabled:
+            return contextlib.nullcontext()
+        health = _obs.plan_health(self.plan)
+        rec.event("engine.dispatch", program=prog.name, bucket=bucket,
+                  epoch=self.plan.epoch, sharded=self.mesh is not None,
+                  exchange_per_superstep=health["exchange_per_superstep"],
+                  edge_lane_occupancy_max=health["edge_lane_occupancy_max"],
+                  vertex_lane_occupancy_max=
+                      health["vertex_lane_occupancy_max"])
+        rec.counter("engine.dispatches")
+        for name, value in health.items():
+            rec.gauge(f"plan.{name}", value)
+        return rec.tags(program=prog.name, bucket=bucket)
+
     def dispatch(self, prog: EdgeProgram, max_supersteps: int | None = None,
                  max_local_iters: int = 100_000, warm_state=None,
                  **kw: Any) -> PendingResult:
@@ -389,17 +438,18 @@ class Engine:
         steps = _steps(prog, max_supersteps)
         prev = self._check_warm(prog, warm_state, None)
         kw = {k: jnp.asarray(v) for k, v in kw.items()}
-        if self.mesh is None:
-            out = _run_single(self.plan, prog, kw, prev, steps,
-                              max_local_iters, self.use_pallas,
-                              self.interpret)
-        else:
-            out = _run_sharded(self._sharded_plan(), kw, prev, prog=prog,
-                               mesh=self.mesh, axis=self.axis,
-                               k_local=self._k_local(),
-                               max_supersteps=steps,
-                               max_local_iters=max_local_iters,
-                               interpret=self.interpret)
+        with self._obs_dispatch(prog, 0):
+            if self.mesh is None:
+                out = _run_single(self.plan, prog, kw, prev, steps,
+                                  max_local_iters, self.use_pallas,
+                                  self.interpret)
+            else:
+                out = _run_sharded(self._sharded_plan(), kw, prev, prog=prog,
+                                   mesh=self.mesh, axis=self.axis,
+                                   k_local=self._k_local(),
+                                   max_supersteps=steps,
+                                   max_local_iters=max_local_iters,
+                                   interpret=self.interpret)
         return PendingResult(out, self.plan.exchange_volume)
 
     def run(self, prog: EdgeProgram, max_supersteps: int | None = None,
@@ -426,29 +476,30 @@ class Engine:
         batched_kw = {k: jnp.asarray(v) for k, v in batched_kw.items()}
         n_batch = next(iter(batched_kw.values())).shape[0]
         prev = self._check_warm(prog, warm_state, n_batch)
-        if self.mesh is None:
-            if prev is None:
-                def one(bkw):
-                    return _run_single(self.plan, prog, {**kw, **bkw}, None,
-                                       steps, max_local_iters, False,
-                                       self.interpret)
+        with self._obs_dispatch(prog, n_batch):
+            if self.mesh is None:
+                if prev is None:
+                    def one(bkw):
+                        return _run_single(self.plan, prog, {**kw, **bkw},
+                                           None, steps, max_local_iters,
+                                           False, self.interpret)
 
-                out = jax.vmap(one)(batched_kw)
+                    out = jax.vmap(one)(batched_kw)
+                else:
+                    def one_warm(bkw, pv):
+                        return _run_single(self.plan, prog, {**kw, **bkw},
+                                           pv, steps, max_local_iters,
+                                           False, self.interpret)
+
+                    out = jax.vmap(one_warm)(batched_kw, prev)
             else:
-                def one_warm(bkw, pv):
-                    return _run_single(self.plan, prog, {**kw, **bkw}, pv,
-                                       steps, max_local_iters, False,
-                                       self.interpret)
-
-                out = jax.vmap(one_warm)(batched_kw, prev)
-        else:
-            out = _run_sharded_batched(self._sharded_plan(), kw, batched_kw,
-                                       prev, prog=prog, mesh=self.mesh,
-                                       axis=self.axis,
-                                       k_local=self._k_local(),
-                                       max_supersteps=steps,
-                                       max_local_iters=max_local_iters,
-                                       interpret=self.interpret)
+                out = _run_sharded_batched(self._sharded_plan(), kw,
+                                           batched_kw, prev, prog=prog,
+                                           mesh=self.mesh, axis=self.axis,
+                                           k_local=self._k_local(),
+                                           max_supersteps=steps,
+                                           max_local_iters=max_local_iters,
+                                           interpret=self.interpret)
         return PendingResult(out, self.plan.exchange_volume)
 
     def run_batched(self, prog: EdgeProgram, batched_kw: dict,

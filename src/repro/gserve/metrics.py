@@ -6,7 +6,17 @@ micro-batch it rode in, and whether the epoch-keyed result cache answered
 it.  ``snapshot()`` folds in the engine plan cache's hit/miss/eviction
 counters (engine.plan.plan_cache_stats) so one record shows the whole
 caching hierarchy: result cache (per query) -> plan cache (per graph
-content) -> jit cache (per bucket shape, tracked by runtime.TRACE_COUNTER).
+content) -> jit cache (per bucket shape, tracked by runtime.TRACE_COUNTER
+and surfaced as ``engine.retrace`` events on the ``repro.obs`` recorder).
+The ``GraphServer`` registers ``snapshot()`` as an ``obs`` provider, so
+``obs.snapshot()`` shows the same record alongside the stream's health
+gauges and the jit trace counters.
+
+Clock discipline: every latency/qps interval here is measured with
+``time.perf_counter()`` — a monotonic clock.  The wall clock
+(``time.time``) steps under NTP adjustment, which can manufacture
+negative latencies or skew qps; calling it is banned from this package
+and from ``repro.obs`` (CI grep guard).
 """
 from __future__ import annotations
 
@@ -39,7 +49,7 @@ class ServeMetrics:
         self.n_lanes_warm = 0          # lanes warm-started from a prior epoch
         self.n_requests_batched = 0    # requests answered by engine runs
         self.n_swaps = 0               # plan-buffer swaps observed
-        self.t0 = time.time()
+        self.t0 = time.perf_counter()
 
     # -- recording (called by the server) -----------------------------------
     def record_result(self, latency_s: float, from_cache: bool) -> None:
@@ -66,7 +76,7 @@ class ServeMetrics:
 
     # -- reporting -----------------------------------------------------------
     def snapshot(self, result_cache_stats: dict | None = None) -> dict:
-        wall = max(time.time() - self.t0, 1e-9)
+        wall = max(time.perf_counter() - self.t0, 1e-9)
         occ = (self.n_requests_batched / self.n_batches
                if self.n_batches else 0.0)
         pad_waste = (1.0 - self.n_lanes_used / self.n_lanes_dispatched

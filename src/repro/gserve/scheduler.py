@@ -77,7 +77,10 @@ class MicroBatcher:
     def __init__(self, buckets: tuple[int, ...] = DEFAULT_BUCKETS):
         assert buckets == tuple(sorted(buckets)) and len(buckets) >= 1
         self.buckets = tuple(int(b) for b in buckets)
-        # each queue holds (request, arrival_time) pairs
+        # each queue holds (request, arrival_time) pairs; arrival times are
+        # time.perf_counter() (monotonic — NTP steps must not fake waits),
+        # and every ``now`` passed into next_batch/oldest_wait must come
+        # from the same clock
         self._queues: "collections.OrderedDict[tuple, collections.deque]" = \
             collections.OrderedDict()
         self._arrival = 0
@@ -101,7 +104,7 @@ class MicroBatcher:
             q = self._queues[key] = collections.deque()
         if not q:
             self._order[key] = self._arrival
-        q.append((req, time.time()))
+        q.append((req, time.perf_counter()))
         self._tenant[req.tenant] += 1
         self._arrival += 1
 
@@ -128,7 +131,7 @@ class MicroBatcher:
             head, t_head = q[0]
             if (max_wait_s is not None and head.entry.batchable
                     and len(q) < self.buckets[-1]
-                    and (now if now is not None else time.time()) - t_head
+                    and (now if now is not None else time.perf_counter()) - t_head
                     < max_wait_s):
                 continue                     # let the bucket fill
             return self._form(key)
@@ -140,7 +143,7 @@ class MicroBatcher:
         heads = [self._queues[k][0][1] for k in self._live_keys()]
         if not heads:
             return None
-        return (now if now is not None else time.time()) - min(heads)
+        return (now if now is not None else time.perf_counter()) - min(heads)
 
     def _form(self, key: tuple) -> MicroBatch:
         q = self._queues[key]

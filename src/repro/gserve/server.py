@@ -40,12 +40,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import threading
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs as _obs
 from ..core.graph import Graph
 from ..engine.errors import ChannelError
 from ..engine.registry import ProgramEntry
@@ -57,6 +59,7 @@ from .scheduler import (DEFAULT_BUCKETS, MicroBatch, MicroBatcher,
                         bucket_for, pad_params)
 
 _BATCH_DTYPES = {int: jnp.int32, float: jnp.float32}
+_SERVER_IDS = itertools.count()   # obs provider names: serve0, serve1, ...
 
 
 def _frozen(a: np.ndarray) -> np.ndarray:
@@ -108,7 +111,7 @@ class _InFlight:
     cached: dict[int, np.ndarray]     # request id -> cache-served value
     n_lanes: int                      # deduped uncached lanes dispatched
     bucket: int                       # padded dispatch shape (0: no dispatch)
-    t_dispatch: float
+    t_dispatch: float                 # perf_counter at dispatch
     warm_lanes: frozenset = frozenset()
                                       # dispatched lane indices that warm-
                                       #   started from a prior epoch's
@@ -117,6 +120,11 @@ class _InFlight:
                                       #   batch (channel plane invalidated
                                       #   by a swap): requests get error
                                       #   results, the drain loop lives on
+    span: int | None = None           # open obs "serve.batch" span id —
+                                      #   execute/materialize spans attach
+                                      #   to it explicitly (the pipelined
+                                      #   drain interleaves batches, so
+                                      #   stack nesting cannot carry it)
 
 
 class GraphServer:
@@ -170,6 +178,12 @@ class GraphServer:
         self._unsubscribe = None
         self._cache_dirty = False
         self._front = self._make_buffer(engine, graph, epoch, version)
+        # obs: one snapshot shows the whole hierarchy — this server's
+        # metrics (result cache included) join the plan-cache and jit
+        # providers; stats is held by weakref, so an un-closed server that
+        # gets collected drops out instead of leaking
+        self._obs_unregister = _obs.get().register_provider(
+            f"serve{next(_SERVER_IDS)}", self.stats)
 
     @classmethod
     def from_session(cls, session, **kwargs) -> "GraphServer":
@@ -186,6 +200,7 @@ class GraphServer:
         if self._unsubscribe is not None:
             self._unsubscribe()
             self._unsubscribe = None
+        self._obs_unregister()
 
     # -- plan double-buffering ----------------------------------------------
     def _make_buffer(self, engine: Engine, graph: Graph, epoch: int,
@@ -233,6 +248,8 @@ class GraphServer:
                 self._warm_ok.clear()
                 self._warm.clear()
             self.metrics.record_swap()
+        _obs.get().event("serve.plan_swap", version=buf.version,
+                         epoch=buf.epoch, content_delta=delta)
 
     def _maybe_invalidate_cache(self) -> None:
         """Deferred swap cleanup; call with the lock held, before any cache
@@ -258,7 +275,24 @@ class GraphServer:
         globally full — so one tenant saturating the queue can never lock
         a quiet tenant out entirely.  The exemption is itself bounded:
         total pending never exceeds ``2 * max_pending``, so a flood of
-        fresh tenant ids cannot defeat load shedding."""
+        fresh tenant ids cannot defeat load shedding.
+
+        Every admission decision is recorded as a ``serve.admission`` span
+        tagged with the tenant and request — the root of the request's
+        span tree, and the audit trail for fair-share rejections."""
+        rec = _obs.get()
+        sid = rec.begin("serve.admission", request=req.id,
+                        tenant=req.tenant, program=req.kind) \
+            if rec.enabled else None
+        try:
+            rid = self._submit(req)
+        except AdmissionError as e:
+            rec.end(sid, admitted=False, reason=str(e))
+            raise
+        rec.end(sid, admitted=True)
+        return rid
+
+    def _submit(self, req: QueryRequest) -> int:
         if req.entry.channel_params:
             # fail malformed property planes at the door (typed ChannelError
             # naming the expected shape) instead of inside a later drain —
@@ -285,7 +319,7 @@ class GraphServer:
                 self.metrics.record_rejection()
                 raise AdmissionError(
                     f"pending queue at hard limit ({2 * self.max_pending})")
-            self._t_submit[req.id] = time.time()
+            self._t_submit[req.id] = time.perf_counter()
             self._batcher.add(req)
             return req.id
 
@@ -347,6 +381,16 @@ class GraphServer:
         entry = req0.entry
         params0 = req0.params
         eng = buffer.engine
+        rec = _obs.get()
+        # per-tenant span tags: the batch span names every rider, so a
+        # trace answers "whose requests shared this dispatch" directly
+        bsid = rec.begin(
+            "serve.batch", program=req0.kind,
+            n_requests=len(batch.requests),
+            requests=[r.id for r in batch.requests],
+            tenants=sorted({r.tenant for r in batch.requests}),
+            version=buffer.version, epoch=buffer.epoch) \
+            if rec.enabled else None
         steps = entry.supersteps_of(params0)
         kw = {name: buffer.resource(name, fn) for name, fn in entry.resources}
         kw.update(entry.ctx_args(params0))
@@ -361,8 +405,8 @@ class GraphServer:
         try:
             kw.update(entry.channel_args(params0, eng.plan))
         except ChannelError as e:
-            return _InFlight(batch, buffer, None, {}, {}, 0, 0, time.time(),
-                             error=str(e))
+            return _InFlight(batch, buffer, None, {}, {}, 0, 0,
+                             time.perf_counter(), error=str(e), span=bsid)
         cached: dict[int, np.ndarray] = {}
         lane_of: dict[int, int] = {}
         pending = None
@@ -401,10 +445,15 @@ class GraphServer:
                 warm_lanes = frozenset(li for li in warm_lanes
                                        if li < n_lanes)
                 bp = entry.batch_param
+                dsid = rec.begin("serve.dispatch", parent=bsid,
+                                 bucket=bucket, lanes=n_lanes,
+                                 warm_lanes=len(warm_lanes)) \
+                    if rec.enabled else None
                 pending = eng.dispatch_batched(
                     entry.program,
                     {bp.name: jnp.asarray(params, _BATCH_DTYPES[bp.dtype])},
                     max_supersteps=steps, warm_state=warm_state, **kw)
+                rec.end(dsid)
         else:                                   # one shared run
             key = req0.cache_key()
             with self._lock:
@@ -415,23 +464,36 @@ class GraphServer:
                     cached[r.id] = hit
             else:
                 n_lanes = bucket = 1
+                dsid = rec.begin("serve.dispatch", parent=bsid, bucket=1,
+                                 lanes=1) if rec.enabled else None
                 pending = eng.dispatch(entry.program, max_supersteps=steps,
                                        **kw)
+                rec.end(dsid)
         if pending is not None:
             self.metrics.record_batch(len(batch.requests) - len(cached),
                                       n_lanes, bucket, len(warm_lanes))
         return _InFlight(batch, buffer, pending, lane_of, cached,
-                         n_lanes, bucket, time.time(), warm_lanes)
+                         n_lanes, bucket, time.perf_counter(), warm_lanes,
+                         span=bsid)
 
     def _complete(self, fl: _InFlight) -> list[QueryResult]:
         """Sync one in-flight batch and materialise per-request results."""
         values: dict[int, np.ndarray] = dict(fl.cached)
         supersteps: dict[int, int] = {}
         entry = fl.batch.requests[0].entry
+        rec = _obs.get()
+        msid = None
         if fl.pending is not None:
+            esid = rec.begin("serve.execute", parent=fl.span,
+                             bucket=fl.bucket, lanes=fl.n_lanes) \
+                if rec.enabled else None
             res = fl.pending.result()
             state = np.asarray(res.state)
             ss = np.asarray(res.supersteps).reshape(-1)
+            rec.end(esid, supersteps=int(ss.max()) if len(ss) else 0)
+            msid = rec.begin("serve.materialize", parent=fl.span,
+                             n_requests=len(fl.batch.requests)) \
+                if rec.enabled else None
             if fl.batch.params is not None:
                 # fan dispatched lanes back out + fill the cache; copy each
                 # lane so neither results nor cache entries pin the whole
@@ -472,7 +534,7 @@ class GraphServer:
                             self.cache.put(fl.buffer.fingerprint(),
                                            fl.batch.requests[0].cache_key(),
                                            state)
-        now = time.time()
+        now = time.perf_counter()
         out = []
         with self._lock:
             for r in fl.batch.requests:
@@ -492,6 +554,9 @@ class GraphServer:
                 out.append(qr)
             while len(self._results) > self._results_max:
                 self._results.popitem(last=False)
+        rec.end(msid)
+        rec.end(fl.span, n_cached=len(fl.cached),
+                failed=fl.error is not None)
         return out
 
     def pump(self) -> list[QueryResult]:
@@ -519,7 +584,7 @@ class GraphServer:
         done: list[QueryResult] = []
         inflight: _InFlight | None = None
         while True:
-            now = time.time()
+            now = time.perf_counter()
             with self._lock:
                 batch = self._batcher.next_batch(now=now,
                                                  max_wait_s=max_wait_s)

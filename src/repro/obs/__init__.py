@@ -1,0 +1,48 @@
+"""repro.obs — end-to-end tracing + partition-health telemetry.
+
+One low-overhead observability layer threaded through partition -> engine
+-> stream -> serve: a process-global ``Recorder`` (fixed-size ring buffer
+of structured events and spans, no-op when disabled) that every subsystem
+records into, partition-health gauges (replication factor, balance,
+slack) stamped on every installed plan mutation, jit retraces surfaced as
+attributable events, and exporters to JSONL and Chrome trace-event format
+so a served request can be followed from admission to host
+materialisation in Perfetto.  See src/repro/obs/README.md for the event
+schema, span taxonomy and overhead contract.
+
+Typical use::
+
+    from repro import obs
+    obs.enable()
+    ... serve queries, apply stream updates ...
+    print(obs.snapshot())                  # whole-hierarchy live stats
+    obs.export_chrome_trace("trace.json")  # open in ui.perfetto.dev
+"""
+from .export import export_chrome_trace, export_jsonl
+from .health import plan_health
+from .recorder import Recorder, get
+
+__all__ = [
+    "Recorder", "disable", "enable", "event", "export_chrome_trace",
+    "export_jsonl", "get", "plan_health", "reset", "snapshot",
+]
+
+
+def enable(capacity: int | None = None) -> None:
+    get().enable(capacity)
+
+
+def disable() -> None:
+    get().disable()
+
+
+def reset() -> None:
+    get().reset()
+
+
+def event(name: str, **args) -> None:
+    get().event(name, **args)
+
+
+def snapshot() -> dict:
+    return get().snapshot()

@@ -1,0 +1,54 @@
+"""Trace exporters: JSONL and Chrome trace-event format (Perfetto-loadable).
+
+Both exporters serialise the recorder's ring contents (oldest first).  The
+JSONL export is the machine-diffable artifact CI uploads from the bench
+smoke run; the Chrome trace loads directly in https://ui.perfetto.dev or
+``chrome://tracing`` so a served request's span tree (admission -> batch ->
+dispatch -> execute -> materialize) can be walked visually.
+
+Chrome trace-event mapping (the subset we emit):
+
+  * spans   -> complete events, ``ph: "X"`` with ``ts``/``dur`` in
+    microseconds; ``args.span_id`` / ``args.parent_id`` carry the explicit
+    tree (the serving drain interleaves batches, so stack-based nesting on
+    one tid is not enough to reconstruct parenthood);
+  * instants -> ``ph: "i"`` with thread scope (``s: "t"``);
+  * every event gets ``pid`` 0 and the recording thread's ident as ``tid``.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any
+
+from .recorder import Recorder, get
+
+
+def _chrome_event(e: dict) -> dict[str, Any]:
+    out = {"name": e["name"], "ph": e["ph"], "ts": e["ts"],
+           "pid": 0, "tid": e["tid"], "args": e["args"]}
+    if e["ph"] == "X":
+        out["dur"] = e["dur"]
+    else:
+        out["s"] = "t"
+    return out
+
+
+def export_jsonl(path: str, recorder: Recorder | None = None) -> int:
+    """One JSON object per line per recorded event; returns the count."""
+    rec = recorder if recorder is not None else get()
+    events = rec.events()
+    with open(path, "w") as f:
+        for e in events:
+            f.write(json.dumps(e, sort_keys=True, default=str) + "\n")
+    return len(events)
+
+
+def export_chrome_trace(path: str, recorder: Recorder | None = None) -> int:
+    """Chrome trace-event JSON (``{"traceEvents": [...]}``); returns the
+    event count.  Load in Perfetto / chrome://tracing."""
+    rec = recorder if recorder is not None else get()
+    events = [_chrome_event(e) for e in rec.events()]
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f,
+                  sort_keys=True, default=str)
+    return len(events)

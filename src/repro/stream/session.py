@@ -29,6 +29,7 @@ from typing import Callable
 
 import numpy as np
 
+from .. import obs as _obs
 from ..core import dfep
 from ..engine import registry as _registry
 from ..engine.plan import compile_plan
@@ -133,6 +134,21 @@ class StreamSession:
 
     def _notify(self, event: str) -> None:
         self.version += 1
+        rec = _obs.get()
+        if rec.enabled:
+            # stamp every installed plan mutation with the paper's health
+            # gauges (replication factor, balance, slack remaining) — the
+            # numbers the partitioning is judged on, live instead of
+            # post-hoc; plan_health is memoized per plan instance
+            health = _obs.plan_health(self.plan)
+            rec.event("stream.plan_swap", event=event,
+                      version=self.version, epoch=self.epoch,
+                      content_delta=self.last_change.get("content_delta"),
+                      inserts=self.last_change.get("inserts", 0),
+                      deletes=self.last_change.get("deletes", 0),
+                      moves=self.last_change.get("moves", 0), **health)
+            for name, value in health.items():
+                rec.gauge(f"stream.{name}", value)
         for fn in list(self._subscribers):
             fn(self, event)
 
@@ -239,6 +255,9 @@ class StreamSession:
                          entry)
         self._channels[(program, param)] = _BoundChannel(
             program, param, spec.channel, spec.features, vals, fill)
+        _obs.get().event("stream.channel_bind", program=program,
+                         param=param, channel=spec.channel,
+                         features=spec.features, rows=vals.shape[0])
 
     def unbind_channel(self, program: str, param: str) -> None:
         """Release a maintained binding. Owner-checked: a session may only
@@ -274,6 +293,9 @@ class StreamSession:
                 bc.values[c.slot] = row
             _registry.get_program(bc.program).bind_channel(
                 bc.param, bc.values)
+            _obs.get().event("stream.channel_rebind", program=bc.program,
+                             param=bc.param, reason="insert_scatter",
+                             rows=len(inserts))
 
     def _channel_remap(self, keep: np.ndarray) -> None:
         """Compaction epoch: remap every bound edge plane by the same slot
@@ -286,6 +308,9 @@ class StreamSession:
             bc.values = vals
             _registry.get_program(bc.program).bind_channel(
                 bc.param, vals)
+            _obs.get().event("stream.channel_rebind", program=bc.program,
+                             param=bc.param, reason="compaction_remap",
+                             rows=len(keep))
 
     def _patch(self, changes: list[EdgeChange]) -> None:
         if not changes:
@@ -304,9 +329,14 @@ class StreamSession:
     # -- update ingestion ---------------------------------------------------
     def apply(self, inserts=None, deletes=None) -> dict:
         """Ingest a batch of edge updates; returns maintenance stats."""
-        cfg = self.cfg
         inserts = np.zeros((0, 2), np.int64) if inserts is None else inserts
         deletes = np.zeros((0, 2), np.int64) if deletes is None else deletes
+        with _obs.get().span("stream.apply", inserts=len(inserts),
+                             deletes=len(deletes)):
+            return self._apply(inserts, deletes)
+
+    def _apply(self, inserts, deletes) -> dict:
+        cfg = self.cfg
         changes: list[EdgeChange] = []
 
         u_live, v_live = self.sg.graph().as_numpy()
@@ -354,6 +384,8 @@ class StreamSession:
         self._channel_scatter(pending)   # pending inserts' rows, old space
         delta = self._delta_of(pending)
         keep = self.sg.compact(headroom_frac=self.cfg.compaction_headroom)
+        _obs.get().event("stream.compaction", kept=len(keep),
+                         e_pad=self.sg.e_pad, epoch=self.epoch + 1)
         owner = np.full(self.sg.e_pad, -2, np.int32)
         owner[:len(keep)] = self.owner[keep]
         self.owner = owner
@@ -378,6 +410,10 @@ class StreamSession:
         changes = [EdgeChange(int(u[s]), int(v[s]), int(self.owner[s]),
                               int(new_owner[s]), int(s)) for s in moved]
         self.owner = new_owner
+        _obs.get().event(
+            "stream.reauction", moves=len(changes),
+            **{k: v for k, v in info.items()
+               if isinstance(v, (int, float, bool, str))})
         self._patch(changes)
         self.n_reauctions += 1
         self.touched[:] = False
