@@ -85,11 +85,16 @@ def main() -> None:
     # reset()s some benchmarks perform (fig_obs), so deltas stay correct
     rec = obs.get()
     rec.enable()
+    # CI postmortems: with REPRO_FLIGHT_DIR set, a crashing figure dumps a
+    # flight bundle (ring + snapshot + gauges) before the run moves on —
+    # the workflow uploads the directory as an artifact on failure
+    from repro.obs import flight as _flight
+    flight_rec = _flight.from_env()
     failures: list[str] = []
-    summary: list[tuple[str, str, float, int]] = []
+    summary: list[tuple[str, str, float, int, int]] = []
     for name in only:
         t0 = time.time()
-        ev0 = rec.stats()["recorded"]
+        s0 = rec.stats()
         print(f"\n### running {name} ...", flush=True)
         try:
             all_benches[name]()
@@ -99,17 +104,28 @@ def main() -> None:
             print(f"### {name} FAILED after {time.time()-t0:.1f}s",
                   flush=True)
             status = "FAILED"
+            if flight_rec is not None:
+                print(f"### flight bundle: "
+                      f"{flight_rec.dump(f'bench.{name}.crash')}",
+                      flush=True)
         else:
             print(f"### {name} done in {time.time()-t0:.1f}s", flush=True)
             status = "ok"
         rec.enable()       # re-arm in case the benchmark disabled it
+        s1 = rec.stats()
         summary.append((name, status, time.time() - t0,
-                        rec.stats()["recorded"] - ev0))
+                        s1["recorded"] - s0["recorded"],
+                        s1["overwritten"] - s0["overwritten"]))
 
+    # "overwr" = ring-buffer events silently overwritten during the figure
+    # (lifetime monotone counter delta): non-zero means the exported trace
+    # is missing that many events — resize the ring or trim the figure
     print("\n### summary (obs recorder: events emitted per figure)")
-    print(f"{'figure':<12} {'status':<8} {'wall_s':>8} {'events':>8}")
-    for name, status, wall, n_events in summary:
-        print(f"{name:<12} {status:<8} {wall:>8.1f} {n_events:>8}")
+    print(f"{'figure':<12} {'status':<8} {'wall_s':>8} {'events':>8} "
+          f"{'overwr':>8}")
+    for name, status, wall, n_events, n_overwr in summary:
+        print(f"{name:<12} {status:<8} {wall:>8.1f} {n_events:>8} "
+              f"{n_overwr:>8}")
     if failures:
         print(f"\n### {len(failures)} benchmark(s) crashed: "
               f"{', '.join(failures)}", flush=True)

@@ -12,6 +12,16 @@ The ``GraphServer`` registers ``snapshot()`` as an ``obs`` provider, so
 ``obs.snapshot()`` shows the same record alongside the stream's health
 gauges and the jit trace counters.
 
+Latency storage: a mergeable log-bucketed ``LogHistogram`` plus a
+``WindowedHistogram`` ring — fixed memory however long the server lives
+(the old unbounded ``latencies`` list leaked one float per request), and
+``snapshot()`` never sorts.  Percentiles are exact to one log-bucket
+width (±3.7% at 32 buckets/decade) with the tails clamped to the exact
+observed min/max; the regression test holds the histogram answers within
+one bucket width of the old sorted-list values.  ``snapshot()`` also
+reports a ``windowed`` sub-dict (trailing ~10s p50/p95/p99 + rate), which
+is what the SLO monitor's burn rates are computed from.
+
 Clock discipline: every latency/qps interval here is measured with
 ``time.perf_counter()`` — a monotonic clock.  The wall clock
 (``time.time``) steps under NTP adjustment, which can manufacture
@@ -25,6 +35,11 @@ import time
 import numpy as np
 
 from ..engine.plan import plan_cache_stats
+from ..obs.histogram import LogHistogram, WindowedHistogram
+
+# Trailing window reported in snapshot()["windowed"]: long enough to be
+# stable at bench qps, short enough to reflect "now" during an incident.
+SNAPSHOT_WINDOW_S = 10.0
 
 
 def percentile(xs: list[float], q: float) -> float:
@@ -38,7 +53,8 @@ class ServeMetrics:
         self.reset()
 
     def reset(self) -> None:
-        self.latencies: list[float] = []
+        self.latency_hist = LogHistogram()
+        self.latency_window = WindowedHistogram(slot_s=0.5, slots=60)
         self.n_completed = 0
         self.n_rejected = 0
         self.n_rejected_fair_share = 0  # subset of rejections: tenant cap
@@ -53,7 +69,9 @@ class ServeMetrics:
 
     # -- recording (called by the server) -----------------------------------
     def record_result(self, latency_s: float, from_cache: bool) -> None:
-        self.latencies.append(float(latency_s))
+        v = float(latency_s)
+        self.latency_hist.record(v)
+        self.latency_window.record(v, now=time.perf_counter() - self.t0)
         self.n_completed += 1
         if from_cache:
             self.n_cache_hits += 1
@@ -81,16 +99,27 @@ class ServeMetrics:
                if self.n_batches else 0.0)
         pad_waste = (1.0 - self.n_lanes_used / self.n_lanes_dispatched
                      if self.n_lanes_dispatched else 0.0)
+        h = self.latency_hist
+        win = self.latency_window.stats(SNAPSHOT_WINDOW_S,
+                                        time.perf_counter() - self.t0)
         return {
             "completed": self.n_completed,
             "rejected": self.n_rejected,
             "rejected_fair_share": self.n_rejected_fair_share,
             "warm_started_lanes": self.n_lanes_warm,
             "qps": round(self.n_completed / wall, 2),
-            "latency_p50_s": round(percentile(self.latencies, 50), 6),
-            "latency_p99_s": round(percentile(self.latencies, 99), 6),
-            "latency_mean_s": round(float(np.mean(self.latencies)), 6)
-                              if self.latencies else 0.0,
+            "latency_p50_s": round(h.percentile(50), 6),
+            "latency_p95_s": round(h.percentile(95), 6),
+            "latency_p99_s": round(h.percentile(99), 6),
+            "latency_mean_s": round(h.mean, 6),
+            "windowed": {
+                "window_s": win["window_s"],
+                "n": win["n"],
+                "rate_per_s": win["rate_per_s"],
+                "p50_s": round(win["p50"], 6),
+                "p95_s": round(win["p95"], 6),
+                "p99_s": round(win["p99"], 6),
+            },
             "batches": self.n_batches,
             "mean_batch_occupancy": round(occ, 3),
             "pad_waste_frac": round(pad_waste, 4),

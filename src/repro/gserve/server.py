@@ -144,18 +144,27 @@ class GraphServer:
     lets partial buckets wait up to the deadline for more requests to
     coalesce before dispatching.  ``warm_entries=0`` disables warm-started
     repair dispatch.
+
+    ``monitor`` (optional, a ``repro.obs.Monitor``) receives every
+    completion (tenant, program, end-to-end latency) and every admission
+    rejection (``ok=False``), and is rate-limitedly evaluated after each
+    completed batch — SLO burn-rate alerts fire as ``obs.alert`` events
+    without a separate polling thread.  The feed is guarded by the
+    recorder's ``enabled`` flag (the observability master switch), so a
+    disabled recorder keeps the serving hot path monitor-free.
     """
 
     def __init__(self, engine: Engine, graph: Graph, *,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  max_pending: int = 1024, cache_entries: int = 512,
                  use_pallas: bool = False, max_wait_s: float | None = None,
-                 warm_entries: int = 256,
+                 warm_entries: int = 256, monitor=None,
                  epoch: int = 0, version: int = 0):
         self.buckets = tuple(buckets)
         self.max_pending = int(max_pending)
         self.use_pallas = bool(use_pallas)
         self.max_wait_s = max_wait_s
+        self.monitor = monitor
         self.metrics = ServeMetrics()
         self.cache = ResultCache(cache_entries)
         self._batcher = MicroBatcher(self.buckets)
@@ -288,6 +297,10 @@ class GraphServer:
             rid = self._submit(req)
         except AdmissionError as e:
             rec.end(sid, admitted=False, reason=str(e))
+            if self.monitor is not None and rec.enabled:
+                # a shed request is an availability failure for its tenant
+                self.monitor.observe(req.tenant, req.kind, 0.0, ok=False)
+                self.monitor.maybe_evaluate()
             raise
         rec.end(sid, admitted=True)
         return rid
@@ -557,6 +570,12 @@ class GraphServer:
         rec.end(msid)
         rec.end(fl.span, n_cached=len(fl.cached),
                 failed=fl.error is not None)
+        if self.monitor is not None and rec.enabled:
+            # outside the lock: observe() only touches monitor-owned rings
+            for qr in out:
+                self.monitor.observe(qr.request.tenant, qr.request.kind,
+                                     qr.latency_s, ok=qr.error is None)
+            self.monitor.maybe_evaluate()
         return out
 
     def pump(self) -> list[QueryResult]:

@@ -7,8 +7,13 @@ records into, partition-health gauges (replication factor, balance,
 slack) stamped on every installed plan mutation, jit retraces surfaced as
 attributable events, and exporters to JSONL and Chrome trace-event format
 so a served request can be followed from admission to host
-materialisation in Perfetto.  See src/repro/obs/README.md for the event
-schema, span taxonomy and overhead contract.
+materialisation in Perfetto.  On top of the passive layer sits the active
+half: mergeable log-bucketed histograms (``LogHistogram`` /
+``WindowedHistogram``), a multi-window burn-rate SLO ``Monitor`` that
+emits first-class ``obs.alert`` events, and a ``FlightRecorder`` that
+dumps bounded postmortem bundles the instant an alert fires (render with
+``python -m repro.obs.report``).  See src/repro/obs/README.md for the
+event schema, span/alert taxonomy and overhead contract.
 
 Typical use::
 
@@ -19,12 +24,17 @@ Typical use::
     obs.export_chrome_trace("trace.json")  # open in ui.perfetto.dev
 """
 from .export import export_chrome_trace, export_jsonl
+from .flight import FlightRecorder
 from .health import plan_health
+from .histogram import LogHistogram, WindowedHistogram
+from .monitor import GaugeWatch, Monitor, SLOPolicy
 from .recorder import Recorder, get
 
 __all__ = [
-    "Recorder", "disable", "enable", "event", "export_chrome_trace",
-    "export_jsonl", "get", "plan_health", "reset", "snapshot",
+    "FlightRecorder", "GaugeWatch", "LogHistogram", "Monitor", "Recorder",
+    "SLOPolicy", "WindowedHistogram", "disable", "enable", "event",
+    "export_chrome_trace", "export_jsonl", "get", "plan_health", "reset",
+    "snapshot",
 ]
 
 

@@ -14,6 +14,14 @@ Chrome trace-event mapping (the subset we emit):
     one tid is not enough to reconstruct parenthood);
   * instants -> ``ph: "i"`` with thread scope (``s: "t"``);
   * every event gets ``pid`` 0 and the recording thread's ident as ``tid``.
+
+Dangling parents: the ring buffer overwrites oldest-first, so a long-lived
+trace can keep a child span whose parent was already evicted.  The Chrome
+exporter re-parents such spans to the root — ``parent_id`` is replaced by
+``dangling_parent_id`` so the tree stays connected (Perfetto renders a
+disconnected id as a silently separate track) while the original id stays
+auditable; the bundle-level count lands in ``otherData.dangling_parents``.
+The JSONL export stays verbatim (it is the machine-diffable artifact).
 """
 from __future__ import annotations
 
@@ -23,9 +31,17 @@ from typing import Any
 from .recorder import Recorder, get
 
 
-def _chrome_event(e: dict) -> dict[str, Any]:
+def _chrome_event(e: dict, span_ids: set | None = None) -> dict[str, Any]:
+    args = e["args"]
+    if span_ids is not None and args.get("parent_id") is not None \
+            and args["parent_id"] not in span_ids:
+        # parent span overwritten by ring wraparound: re-parent to root,
+        # keep the original id for the audit trail (copy — never mutate
+        # the recorder's live ring entries)
+        args = dict(args)
+        args["dangling_parent_id"] = args.pop("parent_id")
     out = {"name": e["name"], "ph": e["ph"], "ts": e["ts"],
-           "pid": 0, "tid": e["tid"], "args": e["args"]}
+           "pid": 0, "tid": e["tid"], "args": args}
     if e["ph"] == "X":
         out["dur"] = e["dur"]
     else:
@@ -47,8 +63,14 @@ def export_chrome_trace(path: str, recorder: Recorder | None = None) -> int:
     """Chrome trace-event JSON (``{"traceEvents": [...]}``); returns the
     event count.  Load in Perfetto / chrome://tracing."""
     rec = recorder if recorder is not None else get()
-    events = [_chrome_event(e) for e in rec.events()]
+    raw = rec.events()
+    span_ids = {e["args"]["span_id"] for e in raw
+                if "span_id" in e["args"]}
+    events = [_chrome_event(e, span_ids) for e in raw]
+    n_dangling = sum("dangling_parent_id" in e["args"] for e in events)
+    doc: dict[str, Any] = {"traceEvents": events, "displayTimeUnit": "ms"}
+    if n_dangling:
+        doc["otherData"] = {"dangling_parents": n_dangling}
     with open(path, "w") as f:
-        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f,
-                  sort_keys=True, default=str)
+        json.dump(doc, f, sort_keys=True, default=str)
     return len(events)

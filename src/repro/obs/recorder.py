@@ -25,7 +25,10 @@ Ring buffer
 -----------
 ``capacity`` slots, overwritten oldest-first.  ``stats()["recorded"]`` is
 a lifetime monotonic count (survives ``reset()``); ``dropped`` counts
-events that have been overwritten since the last reset.
+events that have been overwritten since the last reset, and
+``overwritten`` is the lifetime monotone overwrite count — the silent-
+data-loss meter (``benchmarks/run.py --all`` prints its per-figure
+delta).
 
 Spans
 -----
@@ -74,6 +77,10 @@ class Recorder:
         self._local = threading.local()
         self._lock = threading.Lock()    # guards enable/reset/export only
         self._lifetime = 0               # events ever recorded (never reset)
+        self._overwritten = 0            # events ever lost to ring
+                                         #   wraparound (monotone, never
+                                         #   reset — silent data loss must
+                                         #   stay visible across resets)
         self._reset_state()
 
     def _reset_state(self) -> None:
@@ -116,6 +123,8 @@ class Recorder:
         i = self._n
         self._n = i + 1
         self._lifetime += 1
+        if i >= self._capacity:          # this write evicts the oldest event
+            self._overwritten += 1
         self._ring[i % self._capacity] = rec
         name = rec["name"]
         self._by_name[name] = self._by_name.get(name, 0) + 1
@@ -236,7 +245,17 @@ class Recorder:
                 "recorded": self._lifetime,
                 "since_reset": self._n,
                 "dropped": max(0, self._n - self._capacity),
+                "overwritten": self._overwritten,
                 "open_spans": len(self._open)}
+
+    def gauges(self) -> dict[str, float]:
+        """Latest gauge values (a copy) — the monitor's watchers read these
+        without paying ``snapshot()``'s provider calls."""
+        return dict(self._gauges)
+
+    def counters(self) -> dict[str, float]:
+        """Current counter values (a copy)."""
+        return dict(self._counters)
 
     # -- providers + snapshot ------------------------------------------------
     def register_provider(self, name: str, fn: Callable[[], dict]
@@ -266,11 +285,16 @@ class Recorder:
             fn = self._providers[name]
             if isinstance(fn, weakref.WeakMethod):
                 live = fn()
-                if live is None:                 # owner collected
+                if live is None:                 # owner collected: prune
                     self._providers.pop(name, None)
                     continue
                 fn = live
-            out[name] = fn()
+            # one broken provider must not abort the whole snapshot — it
+            # is exactly the degraded state a postmortem snapshot is FOR
+            try:
+                out[name] = fn()
+            except Exception as e:               # noqa: BLE001
+                out[name] = {"error": f"{type(e).__name__}: {e}"}
         return out
 
 

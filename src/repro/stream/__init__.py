@@ -9,11 +9,15 @@ h-hop region).  See src/repro/stream/README.md for the design note.
 from .assign import hdrf_assign, seed_state
 from .ingest import ApplyResult, StreamingGraph, iter_chunks
 from .patch import EdgeChange, SlackExhausted, patch_plan
+from .policy import (AdaptiveCompactionPolicy, CompactionPolicy,
+                     ReactiveCompactionPolicy)
 from .reauction import h_hop_vertices, local_reauction
 from .session import StreamConfig, StreamSession
 
 __all__ = [
-    "ApplyResult", "EdgeChange", "SlackExhausted", "StreamConfig",
-    "StreamSession", "StreamingGraph", "h_hop_vertices", "hdrf_assign",
-    "iter_chunks", "local_reauction", "patch_plan", "seed_state",
+    "AdaptiveCompactionPolicy", "ApplyResult", "CompactionPolicy",
+    "EdgeChange", "ReactiveCompactionPolicy", "SlackExhausted",
+    "StreamConfig", "StreamSession", "StreamingGraph", "h_hop_vertices",
+    "hdrf_assign", "iter_chunks", "local_reauction", "patch_plan",
+    "seed_state",
 ]

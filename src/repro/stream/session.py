@@ -18,12 +18,19 @@ again:
      or the graph itself running out of spare padded slots (a compaction
      epoch — ``epoch`` bumps and the next query retraces once).
 
+A pluggable ``CompactionPolicy`` (policy.py) decides *when* beyond the
+forced cases: ``idle_tick()`` lets the policy compact proactively during
+idle gaps, and ``recommend_slack`` lets it size the reserved slack from
+observed update telemetry on every recompile — the adaptive policy moves
+the retrace out of the burst and into the gap.
+
 Engine results over the session plan stay exactly consistent with the
 whole-graph oracles on ``session.graph()`` (tests/test_stream.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 import weakref
 from typing import Callable
 
@@ -37,6 +44,7 @@ from ..engine.runtime import Engine
 from . import assign, reauction
 from .ingest import StreamingGraph, iter_chunks
 from .patch import EdgeChange, SlackExhausted, patch_plan
+from .policy import CompactionPolicy, ReactiveCompactionPolicy
 
 
 @dataclasses.dataclass
@@ -89,9 +97,12 @@ class StreamSession:
     the compiled plan maintained, answer engine queries in between."""
 
     def __init__(self, g, cfg: StreamConfig, key: int = 0,
-                 owner: np.ndarray | None = None):
+                 owner: np.ndarray | None = None,
+                 policy: CompactionPolicy | None = None):
         self.cfg = cfg
         self.k = cfg.k
+        self.policy = policy if policy is not None \
+            else ReactiveCompactionPolicy()
         self.sg = StreamingGraph(g, chunk_size=cfg.chunk_size)
         if owner is None:
             owner, _ = dfep.partition(g, k=cfg.k, key=key)
@@ -101,6 +112,10 @@ class StreamSession:
         self.n_ingested = 0
         self.n_patches = 0
         self.n_recompiles = 0
+        self.n_forced_recompiles = 0   # recompiles paid mid-apply (slack or
+                                       #   slot exhaustion) — what the
+                                       #   adaptive policy tries to avoid
+        self.n_idle_compactions = 0    # proactive compactions via idle_tick
         self.n_reauctions = 0
         # monotone plan-version token: bumps on EVERY installed plan (patch,
         # re-auction patch, or compaction recompile) — the serving layer's
@@ -114,6 +129,7 @@ class StreamSession:
                                   "inserts": 0, "deletes": 0, "moves": 0}
         self._subscribers: list[Callable[["StreamSession", str], None]] = []
         self._channels: dict[tuple[str, str], _BoundChannel] = {}
+        self.policy.on_attach(self)
         self._compile()
         self.rf_base = self.plan.replication_factor()
 
@@ -157,15 +173,23 @@ class StreamSession:
         """Default slack is sized from the update granularity (a few chunks
         per partition) with a small |E|-proportional floor — enough for
         several patch batches between compactions without inflating the
-        per-superstep scan over [K, e_max] at steady state."""
+        per-superstep scan over [K, e_max] at steady state.  When the
+        config leaves an axis unset, the compaction policy may raise (never
+        shrink) the default from observed update telemetry — slack sized to
+        the measured burst instead of to a static guess."""
         e = max(self.sg.n_edges, 1)
+        rec_edge, rec_vertex = self.policy.recommend_slack(self)
         edge_slack = self.cfg.edge_slack
         if edge_slack is None:
             edge_slack = max(2 * self.cfg.chunk_size, e // (4 * self.k))
+            if rec_edge is not None:
+                edge_slack = max(edge_slack, int(rec_edge))
         vertex_slack = self.cfg.vertex_slack
         if vertex_slack is None:
             vertex_slack = max(self.cfg.chunk_size,
                                self.sg.n_vertices // (2 * self.k))
+            if rec_vertex is not None:
+                vertex_slack = max(vertex_slack, int(rec_vertex))
         return int(edge_slack), int(vertex_slack)
 
     def _compile(self) -> None:
@@ -188,15 +212,21 @@ class StreamSession:
         return {"content_delta": delta, "inserts": ins, "deletes": dels,
                 "moves": moves}
 
-    def _recompile(self, delta: dict | None = None) -> None:
+    def _recompile(self, delta: dict | None = None,
+                   reason: str = "forced") -> None:
         """Compaction epoch: full plan rebuild; the next query retraces.
         ``delta`` describes the content change the rebuild absorbs (a pure
-        compaction changes no content)."""
+        compaction changes no content).  ``reason`` is "forced" when the
+        rebuild landed mid-apply (slack/slot exhaustion) and "idle" when a
+        policy scheduled it into an idle gap."""
         self.epoch += 1
         self.n_recompiles += 1
+        if reason == "forced":
+            self.n_forced_recompiles += 1
         self._compile()
         self.last_change = {"event": "recompile",
                             **(delta or self._delta_of([]))}
+        self.policy.on_compact(self)
         self._notify("recompile")
 
     # -- session-bound property channels ------------------------------------
@@ -337,6 +367,9 @@ class StreamSession:
 
     def _apply(self, inserts, deletes) -> dict:
         cfg = self.cfg
+        t_apply = time.perf_counter()
+        n_inserts_req = len(inserts)
+        n_updates_req = n_inserts_req + len(deletes)
         changes: list[EdgeChange] = []
 
         u_live, v_live = self.sg.graph().as_numpy()
@@ -372,25 +405,47 @@ class StreamSession:
         self._patch(changes)
 
         reauction_info = self._reauction() if self._drifted() else None
+        # feed the policy's telemetry: requested counts (dedup/no-op skips
+        # included — they are offered load) + the batch's wall duration
+        self.policy.on_apply(self, n_updates_req, n_inserts_req,
+                             time.perf_counter() - t_apply)
         return {"epoch": self.epoch, "patches": self.n_patches,
                 "recompiles": self.n_recompiles,
+                "forced_recompiles": self.n_forced_recompiles,
+                "idle_compactions": self.n_idle_compactions,
                 "reauctions": self.n_reauctions,
                 "rf": self.plan.replication_factor(),
                 "rf_base": self.rf_base, "reauction": reauction_info}
 
-    def _flush_via_compaction(self, pending: list[EdgeChange]) -> None:
+    def _flush_via_compaction(self, pending: list[EdgeChange],
+                              reason: str = "forced") -> None:
         """Compact the graph's slot space; pending patch changes are
         absorbed by the recompile (owner already reflects them)."""
         self._channel_scatter(pending)   # pending inserts' rows, old space
         delta = self._delta_of(pending)
         keep = self.sg.compact(headroom_frac=self.cfg.compaction_headroom)
         _obs.get().event("stream.compaction", kept=len(keep),
-                         e_pad=self.sg.e_pad, epoch=self.epoch + 1)
+                         e_pad=self.sg.e_pad, epoch=self.epoch + 1,
+                         reason=reason)
         owner = np.full(self.sg.e_pad, -2, np.int32)
         owner[:len(keep)] = self.owner[keep]
         self.owner = owner
         self._channel_remap(keep)
-        self._recompile(delta)
+        self._recompile(delta, reason=reason)
+
+    def idle_tick(self) -> bool:
+        """Give the compaction policy an idle gap: compacts (and recompiles
+        with policy-recommended slack) when the policy says the remaining
+        headroom could not absorb the observed burst pattern.  Returns
+        whether a compaction ran — the retrace it implies is paid HERE, in
+        the gap, pre-empting a forced one mid-burst.  Serving layers call
+        this between drains; it is cheap when the policy declines."""
+        if not self.policy.should_compact(self):
+            return False
+        self.n_idle_compactions += 1
+        with _obs.get().span("stream.idle_compaction"):
+            self._flush_via_compaction([], reason="idle")
+        return True
 
     # -- drift-triggered local re-auction -----------------------------------
     def _drifted(self) -> bool:
@@ -409,7 +464,9 @@ class StreamSession:
         v = np.asarray(g.dst)
         changes = [EdgeChange(int(u[s]), int(v[s]), int(self.owner[s]),
                               int(new_owner[s]), int(s)) for s in moved]
-        self.owner = new_owner
+        # writable copy: local_reauction hands back a read-only jax-backed
+        # view, and the next insert chunk assigns into this array in place
+        self.owner = np.array(new_owner)
         _obs.get().event(
             "stream.reauction", moves=len(changes),
             **{k: v for k, v in info.items()

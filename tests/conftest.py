@@ -4,15 +4,43 @@ The container has no ``hypothesis`` wheel; rather than losing the property
 tests we install a minimal, deterministic stand-in exposing the subset the
 suite uses (``given`` / ``settings`` / ``strategies.integers``). When the
 real package is available it is used untouched.
+
+With ``REPRO_FLIGHT_DIR`` set (CI exports it), every test failure also
+dumps a flight-recorder bundle — the obs ring, counters, gauges, and
+provider snapshot at the moment of the assertion — into that directory,
+which the workflow uploads as an artifact.  Locally the variable is unset
+and the hook is inert.
 """
 from __future__ import annotations
 
 import functools
 import inspect
+import os
 import random
 import sys
 import types
 import zlib
+
+import pytest
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_makereport(item, call):
+    outcome = yield
+    rep = outcome.get_result()
+    if rep.when != "call" or not rep.failed:
+        return
+    if not os.environ.get("REPRO_FLIGHT_DIR"):
+        return
+    try:  # postmortem capture must never mask the real failure
+        from repro.obs import flight
+        fr = flight.from_env()
+        if fr is not None:
+            fr.dump(f"test.{item.nodeid}",
+                    context={"outcome": rep.outcome,
+                             "duration_s": round(rep.duration, 3)})
+    except Exception:
+        pass
 
 try:  # pragma: no cover - exercised only where hypothesis is installed
     import hypothesis  # noqa: F401

@@ -1,0 +1,441 @@
+"""Active observability correctness: log-histogram percentile accuracy
+against ``np.percentile`` on adversarial distributions + merge
+associativity, multi-window burn-rate alerts firing and clearing on
+synthetic latency streams (fake clock), flight-bundle round-trip +
+bounded retention + report rendering that names tenant/program/window,
+``ServeMetrics`` histogram percentiles matching the old sorted-list
+values within one log-bucket width, and the adaptive compaction policy
+triggering on a scripted idle-after-burst sequence with oracle-exact,
+retrace-free patched plans."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import dfep, graph
+from repro import engine as E
+from repro import gserve as G
+from repro import obs
+from repro import stream as S
+from repro.engine import runtime
+from repro.gserve.metrics import ServeMetrics, percentile
+from repro.obs import report
+from repro.obs.flight import FlightRecorder
+from repro.obs.histogram import LogHistogram, WindowedHistogram
+from repro.obs.monitor import GaugeWatch, Monitor, SLOPolicy
+
+
+@pytest.fixture(autouse=True)
+def _clean_recorder():
+    rec = obs.get()
+    rec.disable()
+    rec.reset()
+    yield
+    rec.disable()
+    rec.reset()
+
+
+# ---------------------------------------------------------------------------
+# histograms
+# ---------------------------------------------------------------------------
+
+ADVERSARIAL = {
+    # one bucket holds everything: every percentile must be exact
+    "point_mass": np.full(500, 3.7e-3),
+    # dense low mode + tiny far tail: tail percentiles must not collapse
+    "bimodal_heavy_tail": np.concatenate([np.full(990, 1e-4),
+                                          np.full(10, 50.0)]),
+    # samples exactly on decade edges (bucket-boundary rounding)
+    "decade_edges": np.array([1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0,
+                              10.0] * 40),
+    # 5 orders of magnitude, log-uniform
+    "log_uniform": 10.0 ** np.random.default_rng(0).uniform(-5, 0, 2000),
+    # realistic latency shape
+    "lognormal": np.random.default_rng(1).lognormal(-6.0, 1.0, 2000),
+}
+
+
+@pytest.mark.parametrize("name", sorted(ADVERSARIAL))
+def test_percentile_within_one_bucket_of_exact(name):
+    xs = ADVERSARIAL[name]
+    h = LogHistogram()
+    h.record_many(xs)
+    w = h.width_factor
+    for q in (1, 25, 50, 75, 90, 95, 99, 99.9, 100):
+        # the histogram implements the inverted-CDF (nearest-rank)
+        # percentile; compare against numpy's same definition
+        exact = float(np.percentile(xs, q, method="inverted_cdf"))
+        got = h.percentile(q)
+        assert exact / w <= got <= exact * w, (name, q, exact, got)
+    assert h.n == len(xs)
+    assert h.vmin == xs.min() and h.vmax == xs.max()
+    assert h.mean == pytest.approx(xs.mean())
+
+
+def test_percentile_tails_clamped_to_observed_range():
+    h = LogHistogram()
+    h.record_many([2.5e-3] * 99 + [7.0])
+    assert h.percentile(100) == 7.0          # exact max, not bucket midpoint
+    assert h.percentile(1) >= 2.5e-3 / h.width_factor
+    assert h.percentile(0) >= h.vmin
+
+
+def test_merge_is_associative_and_matches_bulk():
+    rng = np.random.default_rng(2)
+    parts = [rng.lognormal(-5, 1.5, n) for n in (17, 400, 3, 81)]
+    whole = LogHistogram()
+    whole.record_many(np.concatenate(parts))
+
+    def hist(xs):
+        h = LogHistogram()
+        h.record_many(xs)
+        return h
+
+    a, b, c, d = map(hist, parts)
+    left = hist([]).merge(a).merge(b).merge(c).merge(d)
+    right = hist([]).merge(a.copy().merge(b)).merge(c.copy().merge(d))
+    for m in (left, right):
+        assert np.array_equal(m.counts, whole.counts)
+        assert m.n == whole.n
+        assert m.vmin == whole.vmin and m.vmax == whole.vmax
+        assert m.total == pytest.approx(whole.total)
+    with pytest.raises(ValueError):
+        left.merge(LogHistogram(buckets_per_decade=16))
+
+
+def test_windowed_histogram_rotation_and_expiry():
+    wh = WindowedHistogram(slot_s=1.0, slots=4)
+    wh.record(1e-3, now=0.5)
+    wh.record(1e-2, now=1.5, ok=False)
+    hist, n_fail = wh.window(2.0, now=1.9)
+    assert hist.n == 2 and n_fail == 1
+    # jump far ahead: every old slice must expire, even with no recording
+    hist, n_fail = wh.window(4.0, now=100.0)
+    assert hist.n == 0 and n_fail == 0
+    assert wh.lifetime_n == 2 and wh.lifetime_fail == 1
+    wh.record(5e-3, now=101.0)
+    hist, _ = wh.window(4.0, now=101.0)
+    assert hist.n == 1
+    assert wh.rate(4.0, now=101.0) == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# burn-rate monitor (fake clock)
+# ---------------------------------------------------------------------------
+
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+    clock.advance = lambda dt: t.__setitem__(0, t[0] + dt)
+    return clock
+
+
+def test_burn_rate_fires_and_clears_on_synthetic_stream():
+    clock = _fake_clock()
+    mon = Monitor(policies=[SLOPolicy(
+        name="p99-lat", tenant="*", program="sssp",
+        latency_objective_s=1e-3, availability_target=0.99,
+        fast_window_s=5.0, slow_window_s=30.0, burn_threshold=2.0,
+        min_samples=5)], clock=clock)
+    rec = obs.get()
+    rec.enable()
+
+    for _ in range(60):                      # healthy: all under objective
+        clock.advance(0.5)
+        mon.observe("tA", "sssp", 1e-4)
+    assert mon.evaluate() == [] and mon.active_alerts() == []
+
+    for _ in range(60):                      # breach: all over objective
+        clock.advance(0.5)
+        mon.observe("tA", "sssp", 5e-2)
+    fired = mon.evaluate()
+    assert len(fired) == 1
+    alert = fired[0]
+    assert alert["kind"] == "burn_rate" and alert["tenant"] == "tA"
+    assert alert["program"] == "sssp"
+    assert alert["burn_fast"] >= 2.0 and alert["burn_slow"] >= 2.0
+    assert alert["window"]["fast"]["bad"] > 0
+    assert mon.active_alerts() == [alert]
+    # still breached next tick: edge-triggered, no duplicate event
+    clock.advance(0.5)
+    assert mon.evaluate() == []
+    assert len([e for e in rec.events() if e["name"] == "obs.alert"]) == 1
+
+    for _ in range(120):                     # recovery: fast window drains
+        clock.advance(0.5)
+        mon.observe("tA", "sssp", 1e-4)
+    assert mon.evaluate() == []
+    assert mon.active_alerts() == []
+    assert any(e["name"] == "obs.alert_clear" for e in rec.events())
+    mon.close()
+
+
+def test_rejections_count_as_bad_and_wildcards_name_offender():
+    clock = _fake_clock()
+    mon = Monitor(policies=[SLOPolicy(
+        name="avail", latency_objective_s=10.0,   # latency never "bad"
+        availability_target=0.9, fast_window_s=4.0, slow_window_s=8.0,
+        burn_threshold=1.5, min_samples=4)], clock=clock)
+    for _ in range(20):
+        clock.advance(0.3)
+        mon.observe("noisy", "wcc", 0.0, ok=False)   # shed at admission
+        mon.observe("quiet", "wcc", 1e-4)
+    fired = mon.evaluate()
+    assert [a["tenant"] for a in fired] == ["noisy"]
+    assert fired[0]["window"]["fast"]["n_fail"] > 0
+    mon.close()
+
+
+def test_gauge_watch_ceiling_and_drift():
+    clock = _fake_clock()
+    mon = Monitor(clock=clock)
+    mon.watch_gauge(GaugeWatch(gauge="stream.replication_factor",
+                               ceiling=4.0, max_rel_increase=0.10))
+    rec = obs.get()
+    rec.enable()
+    rec.gauge("stream.replication_factor", 2.0)   # baseline
+    assert mon.evaluate() == []
+    rec.gauge("stream.replication_factor", 2.5)   # +25% drift, under ceiling
+    fired = mon.evaluate()
+    assert len(fired) == 1 and fired[0]["kind"] == "gauge_drift"
+    assert "drifted" in fired[0]["reasons"][0]
+    rec.gauge("stream.replication_factor", 2.05)  # back within drift bound
+    assert mon.evaluate() == [] and mon.active_alerts() == []
+    mon.close()
+
+
+def test_retrace_rate_watcher():
+    clock = _fake_clock()
+    mon = Monitor(clock=clock)
+    mon.watch_retrace_rate(max_per_s=0.5, window_s=10.0)
+    rec = obs.get()
+    rec.enable()
+    assert mon.evaluate() == []
+    for _ in range(5):
+        clock.advance(1.0)
+        rec.counter("engine.retraces", 2)          # 2/s: a retrace storm
+        mon.evaluate()
+    active = mon.active_alerts()
+    assert len(active) == 1 and active[0]["kind"] == "retrace_rate"
+    assert active[0]["rate_per_s"] > 0.5
+    mon.close()
+
+
+# ---------------------------------------------------------------------------
+# flight recorder + report
+# ---------------------------------------------------------------------------
+
+def test_flight_bundle_roundtrip_and_bounded_retention(tmp_path):
+    rec = obs.get()
+    rec.enable()
+    rec.event("stream.plan_swap", version=3)
+    rec.gauge("stream.replication_factor", 2.5)
+    fr = FlightRecorder(str(tmp_path), max_bundles=3)
+    paths = [fr.dump(f"reason-{i}", context={"i": i}) for i in range(5)]
+    kept = fr.bundles()
+    assert len(kept) == 3                      # retention bound holds
+    assert [p.name for p in kept] == [p.name for p in paths[2:]]
+    doc = json.loads(kept[-1].read_text())
+    assert doc["flight_bundle"] == 1
+    assert doc["reason"] == "reason-4" and doc["context"] == {"i": 4}
+    assert doc["stats"]["recorded"] >= 1
+    assert doc["snapshot"]["gauges"]["stream.replication_factor"] == 2.5
+    assert any(e["name"] == "stream.plan_swap" for e in doc["events"])
+    # the dump itself is on the record (so the NEXT bundle shows this one)
+    assert any(e["name"] == "obs.flight_dump" for e in rec.events())
+
+
+def test_report_names_tenant_program_and_window(tmp_path):
+    clock = _fake_clock()
+    rec = obs.get()
+    rec.enable()
+    mon = Monitor(policies=[SLOPolicy(
+        name="slo-sssp", tenant="tenant-slow", program="sssp",
+        latency_objective_s=1e-3, fast_window_s=5.0, slow_window_s=20.0,
+        min_samples=3)], clock=clock)
+    fr = FlightRecorder(str(tmp_path))
+    disarm = fr.arm(mon)
+    for _ in range(30):
+        clock.advance(0.5)
+        mon.observe("tenant-slow", "sssp", 0.2)
+    mon.evaluate()
+    assert len(fr.bundles()) == 1              # armed dump at fire time
+    text = report.render(report.load(str(fr.bundles()[0])))
+    assert "tenant-slow" in text and "sssp" in text
+    assert "slo-sssp" in text
+    assert "window" in text and "fast 5.0s" in text
+    assert "burn rate" in text
+    disarm()
+    mon.close()
+
+
+def test_report_renders_jsonl_trace(tmp_path):
+    rec = obs.get()
+    rec.enable()
+    with rec.span("serve.batch", program="wcc"):
+        rec.event("engine.dispatch", bucket=8)
+    path = tmp_path / "trace.jsonl"
+    obs.export_jsonl(str(path))
+    text = report.render(report.load(str(path)))
+    assert "serve.batch" in text and "engine.dispatch" in text
+    assert "SPAN LATENCY" in text
+
+
+# ---------------------------------------------------------------------------
+# ServeMetrics on histograms
+# ---------------------------------------------------------------------------
+
+def test_serve_metrics_percentiles_match_list_within_bucket_width():
+    m = ServeMetrics()
+    rng = np.random.default_rng(3)
+    lats = rng.lognormal(-6.5, 0.8, 800)       # realistic latency spread
+    for v in lats:
+        m.record_result(float(v), from_cache=False)
+    snap = m.snapshot()
+    w = m.latency_hist.width_factor
+    xs = list(lats)
+    for key, q in (("latency_p50_s", 50), ("latency_p95_s", 95),
+                   ("latency_p99_s", 99)):
+        old = percentile(xs, q)                # the old sorted-list answer
+        assert old / w <= snap[key] <= old * w, (key, old, snap[key])
+    assert snap["latency_mean_s"] == pytest.approx(lats.mean(), rel=1e-4)
+    assert snap["completed"] == len(lats)
+    assert snap["windowed"]["n"] == len(lats)
+    assert snap["windowed"]["p99_s"] > 0
+    # fixed memory: the histogram state does not grow with request count
+    assert not hasattr(m, "latencies")
+
+
+def test_served_slow_tenant_fires_alert_and_bundle_names_it(tmp_path):
+    """End-to-end acceptance: a served workload with one injected-slow
+    tenant raises an ``obs.alert`` burn-rate event naming that tenant, and
+    the armed flight recorder's bundle renders to a report naming
+    tenant/program/window."""
+    g = graph.watts_strogatz(150, 4, 0.2, seed=3)
+    owner, _ = dfep.partition(g, k=4, key=0)
+    plan = E.compile_plan(g, np.asarray(owner), 4)
+    # per-tenant objectives: impossible for the slow tenant (every request
+    # is over budget), unmissable for the fast one
+    mon = Monitor(policies=[
+        SLOPolicy(name="slo-slow", tenant="t-slow", latency_objective_s=1e-9,
+                  fast_window_s=5.0, slow_window_s=20.0, min_samples=3),
+        SLOPolicy(name="slo-fast", tenant="t-fast", latency_objective_s=60.0,
+                  fast_window_s=5.0, slow_window_s=20.0, min_samples=3),
+    ], eval_interval_s=0.0)
+    fr = FlightRecorder(str(tmp_path))
+    disarm = fr.arm(mon)
+    srv = G.GraphServer(E.Engine(plan), g, cache_entries=0, monitor=mon)
+    rec = obs.get()
+    rec.enable()
+    srv.serve([G.QueryRequest("sssp", tenant=t, params={"source": i})
+               for i, t in enumerate(["t-slow", "t-fast"] * 6)])
+    alerts = mon.active_alerts()
+    assert [a["tenant"] for a in alerts] == ["t-slow"]
+    assert alerts[0]["policy"] == "slo-slow"
+    assert any(e["name"] == "obs.alert" for e in rec.events())
+    assert len(fr.bundles()) == 1
+    text = report.render(report.load(str(fr.bundles()[0])))
+    assert "t-slow" in text and "sssp" in text and "slo-slow" in text
+    assert "t-fast" not in text.split("ALERTS")[1].split("HEALTH")[0]
+    disarm()
+    srv.close()
+    mon.close()
+
+
+def test_monitor_not_fed_when_recorder_disabled():
+    g = graph.watts_strogatz(150, 4, 0.2, seed=3)
+    owner, _ = dfep.partition(g, k=4, key=0)
+    plan = E.compile_plan(g, np.asarray(owner), 4)
+    mon = Monitor()
+    srv = G.GraphServer(E.Engine(plan), g, cache_entries=0, monitor=mon)
+    srv.serve([G.QueryRequest("sssp", tenant="a", params={"source": 1})])
+    assert mon._series == {}        # master switch off: no monitor cost
+    srv.close()
+    mon.close()
+
+
+# ---------------------------------------------------------------------------
+# adaptive compaction policy
+# ---------------------------------------------------------------------------
+
+def _burst(n_v, n, seed):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n_v, size=(n, 2))
+    return e[e[:, 0] != e[:, 1]]
+
+
+def test_adaptive_policy_compacts_in_idle_gap_not_mid_burst():
+    """Scripted idle-after-burst: after a warmup burst the adaptive policy
+    must (a) compact during idle_tick, not mid-apply, (b) leave patched
+    plans oracle-exact, and (c) keep the bursts retrace-free (queries
+    between bursts hit the warm jit cache)."""
+    g = graph.watts_strogatz(220, 4, 0.2, seed=5)
+    clock = _fake_clock()
+    policy = S.AdaptiveCompactionPolicy(
+        Monitor(clock=clock), headroom_batches=3.0)
+    sess = S.StreamSession(g, S.StreamConfig(k=4, chunk_size=64,
+                                             drift_threshold=1e9),
+                           key=0, policy=policy)
+    reactive = S.StreamSession(g, S.StreamConfig(k=4, chunk_size=64,
+                                                 drift_threshold=1e9), key=0)
+    # warmup burst: telemetry for the policy, jit warmth for the engine
+    # (the policy has no telemetry before its first apply, so this burst
+    # may itself be forced — fig_stream's timed phase starts after warmup
+    # for the same reason, and so does the assertion window here)
+    sess.apply(inserts=_burst(g.n_vertices, 150, 90))
+    clock.advance(1.0)
+    assert sess.idle_tick()                     # proactive: telemetry says
+    assert sess.n_idle_compactions == 1         #   headroom can't absorb 3x
+    E.engine_sssp(sess.engine, 0)               # absorb the idle retrace
+    forced0 = sess.n_forced_recompiles
+
+    traces0 = runtime.TRACE_COUNTER["run_loop"]
+    for wave in range(4):                       # timed phase equivalent
+        sess.apply(inserts=_burst(g.n_vertices, 150, 91 + wave))
+        reactive.apply(inserts=_burst(g.n_vertices, 150, 91 + wave))
+        r = E.engine_sssp(sess.engine, 0)
+        ref, _ = alg.reference_sssp(sess.graph(), 0)
+        assert np.array_equal(np.asarray(r.state), np.asarray(ref))
+        clock.advance(1.0)
+        if sess.idle_tick():
+            E.engine_sssp(sess.engine, 0)       # retrace paid in the gap
+            traces0 = runtime.TRACE_COUNTER["run_loop"]
+        else:
+            assert runtime.TRACE_COUNTER["run_loop"] == traces0
+    assert sess.n_forced_recompiles == forced0
+    # the reactive twin on the identical workload was forced mid-burst
+    assert reactive.n_forced_recompiles >= 1
+    policy.close()
+
+
+def test_adaptive_policy_sizes_slack_from_observed_peak():
+    mon = Monitor(clock=_fake_clock())
+    policy = S.AdaptiveCompactionPolicy(mon, headroom_batches=2.0)
+    g = graph.watts_strogatz(150, 4, 0.2, seed=1)
+    sess = S.StreamSession(g, S.StreamConfig(k=4, chunk_size=32,
+                                             drift_threshold=1e9),
+                           key=0, policy=policy)
+    assert policy.recommend_slack(sess) == (None, None)   # no telemetry yet
+    policy.on_apply(sess, 500, 500, 0.1)
+    edge_rec, vertex_rec = policy.recommend_slack(sess)
+    assert edge_rec == 1000 and vertex_rec is None
+    # the recommendation only ever RAISES the session default: a recompile
+    # sized by it leaves >= 2*edge_slack free half-edge slots everywhere
+    from repro.obs.health import plan_health
+    sess._recompile(reason="idle")
+    assert plan_health(sess.plan)["min_free_edge_slots"] >= 2 * 1000
+    assert sess.n_forced_recompiles == 0        # idle recompile not "forced"
+    mon.close()
+
+
+def test_reactive_policy_is_default_and_inert():
+    g = graph.watts_strogatz(120, 4, 0.2, seed=2)
+    sess = S.StreamSession(g, S.StreamConfig(k=3, chunk_size=32,
+                                             drift_threshold=1e9), key=0)
+    assert isinstance(sess.policy, S.ReactiveCompactionPolicy)
+    sess.apply(inserts=_burst(g.n_vertices, 40, 1))
+    assert sess.idle_tick() is False            # never proactive
+    assert sess.n_idle_compactions == 0

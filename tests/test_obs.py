@@ -378,6 +378,61 @@ def test_export_roundtrip(tmp_path):
             assert te["args"]["parent_id"] in sids
 
 
+def test_overwritten_counter_monotone_across_reset():
+    r = Recorder(capacity=8)
+    r.enable()
+    for i in range(12):
+        r.event("tick", i=i)
+    assert r.stats()["overwritten"] == 4
+    r.reset()                        # ring cleared, lifetime loss is not
+    assert r.stats()["overwritten"] == 4
+    r.enable()
+    for i in range(10):
+        r.event("tock", i=i)
+    st = r.stats()
+    assert st["overwritten"] == 6
+    assert st["dropped"] == 2        # per-reset loss restarts, lifetime grows
+
+
+def test_chrome_export_tolerates_overwritten_parent(tmp_path):
+    r = Recorder(capacity=4)
+    r.enable()
+    with r.span("parent") as pid:
+        pass                         # parent's X event lands first...
+    sid = r.begin("orphan-child", parent=pid)
+    r.end(sid)
+    for i in range(3):               # ...and the flood overwrites it
+        r.event("filler", i=i)
+    assert all(e["name"] != "parent" for e in r.events())
+    path = tmp_path / "trace.json"
+    n = obs.export_chrome_trace(str(path), recorder=r)
+    doc = json.loads(path.read_text())
+    assert n == len(doc["traceEvents"]) == 4
+    # the unresolvable reference is renamed, not emitted: Perfetto would
+    # otherwise try to parent the slice onto a nonexistent span
+    (child,) = [te for te in doc["traceEvents"]
+                if te["name"] == "orphan-child"]
+    assert "parent_id" not in child["args"]
+    assert child["args"]["dangling_parent_id"] == pid
+    assert doc["otherData"]["dangling_parents"] == 1
+
+
+def test_raising_provider_reported_not_fatal():
+    r = Recorder()
+    boom_calls = []
+
+    def boom():
+        boom_calls.append(1)
+        raise RuntimeError("gauge backend gone")
+
+    r.register_provider("boom", boom)
+    r.register_provider("fine", lambda: {"ok": 1})
+    snap = r.snapshot()              # must not raise
+    assert snap["fine"] == {"ok": 1}
+    assert snap["boom"] == {"error": "RuntimeError: gauge backend gone"}
+    assert boom_calls == [1]
+
+
 # ---------------------------------------------------------------------------
 # clock discipline (satellite of the CI hygiene grep)
 # ---------------------------------------------------------------------------
