@@ -31,7 +31,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6,fig7,fig8,fig9,fig10,"
-                         "stream,serve,serve_mesh,programs,obs,kernels")
+                         "stream,serve,serve_mesh,programs,obs,cost,kernels")
     ap.add_argument("--all", action="store_true",
                     help="run every registered benchmark (the default when "
                          "--only is absent; the two flags are exclusive)")
@@ -46,9 +46,9 @@ def main() -> None:
     # imports AFTER env so common.py picks the scales up
     from repro import obs
     from . import (fig5_k_sweep, fig6_diameter, fig7_comparison,
-                   fig8_scalability, fig9_sssp, fig10_engine, fig_obs,
-                   fig_programs, fig_serve, fig_serve_mesh, fig_stream,
-                   kernel_bench)
+                   fig8_scalability, fig9_sssp, fig10_engine, fig_cost,
+                   fig_obs, fig_programs, fig_serve, fig_serve_mesh,
+                   fig_stream, kernel_bench)
 
     all_benches = {
         "fig5": fig5_k_sweep.main,
@@ -62,6 +62,7 @@ def main() -> None:
         "serve_mesh": fig_serve_mesh.main,
         "programs": fig_programs.main,
         "obs": fig_obs.main,
+        "cost": fig_cost.main,
         "kernels": kernel_bench.main,
     }
     # registry completeness: every benchmark module on disk must be wired
@@ -89,12 +90,14 @@ def main() -> None:
     # flight bundle (ring + snapshot + gauges) before the run moves on —
     # the workflow uploads the directory as an artifact on failure
     from repro.obs import flight as _flight
+    from repro.gserve import metrics as _gmetrics
     flight_rec = _flight.from_env()
     failures: list[str] = []
-    summary: list[tuple[str, str, float, int, int]] = []
+    summary: list[tuple[str, str, float, int, int, float, int]] = []
     for name in only:
         t0 = time.time()
         s0 = rec.stats()
+        x0 = _gmetrics.exec_totals()
         print(f"\n### running {name} ...", flush=True)
         try:
             all_benches[name]()
@@ -113,19 +116,38 @@ def main() -> None:
             status = "ok"
         rec.enable()       # re-arm in case the benchmark disabled it
         s1 = rec.stats()
+        x1 = _gmetrics.exec_totals()
         summary.append((name, status, time.time() - t0,
                         s1["recorded"] - s0["recorded"],
-                        s1["overwritten"] - s0["overwritten"]))
+                        s1["overwritten"] - s0["overwritten"],
+                        x1["device_s"] - x0["device_s"],
+                        x1["executes"] - x0["executes"]))
 
     # "overwr" = ring-buffer events silently overwritten during the figure
     # (lifetime monotone counter delta): non-zero means the exported trace
-    # is missing that many events — resize the ring or trim the figure
-    print("\n### summary (obs recorder: events emitted per figure)")
+    # is missing that many events — resize the ring or trim the figure.
+    # "dev_s"/"execs" = serving device-time spend (summed execute-span
+    # durations / dispatch count, gserve.metrics.exec_totals deltas): the
+    # attribution denominator the cost ledger reconciles against — zero for
+    # figures that never touch the serving path
+    print("\n### summary (obs recorder events + serving device time "
+          "per figure)")
     print(f"{'figure':<12} {'status':<8} {'wall_s':>8} {'events':>8} "
-          f"{'overwr':>8}")
-    for name, status, wall, n_events, n_overwr in summary:
+          f"{'overwr':>8} {'dev_s':>8} {'execs':>6}")
+    for name, status, wall, n_events, n_overwr, dev_s, execs in summary:
         print(f"{name:<12} {status:<8} {wall:>8.1f} {n_events:>8} "
-              f"{n_overwr:>8}")
+              f"{n_overwr:>8} {dev_s:>8.2f} {execs:>6}")
+    xt = _gmetrics.exec_totals()
+    win = xt["windowed"]
+    print(f"### serving device time: {xt['device_s']:.2f}s total over "
+          f"{xt['executes']} executes; trailing {win['window_s']:.0f}s: "
+          f"{win['n']} spans, p99 {win['p99']:.4f}s")
+    from repro.obs.ledger import get_ledger
+    lt = get_ledger().totals()
+    if lt["requests"]:
+        print(f"### global cost ledger: {lt['requests']} requests in "
+              f"{lt['series']} series, {lt['device_s']:.2f} device-s, "
+              f"{lt['flops']:.3g} flops")
     if failures:
         print(f"\n### {len(failures)} benchmark(s) crashed: "
               f"{', '.join(failures)}", flush=True)

@@ -510,6 +510,55 @@ class Engine:
                                      max_local_iters, warm_state=warm_state,
                                      **kw).result()
 
+    def lower_hlo(self, prog: EdgeProgram, batched_kw: dict | None = None,
+                  max_supersteps: int | None = None,
+                  max_local_iters: int = 100_000, **kw: Any) -> str:
+        """Post-optimization HLO text of the executable a ``dispatch``
+        (``batched_kw=None``) or ``dispatch_batched`` of the same shape
+        would run — the input ``repro.obs.profile`` feeds the
+        ``roofline.hlo_parse`` analyzer to build per-plan cost models.
+
+        This pays one AOT trace + XLA compile per call (the ``.lower()``
+        path does not share the C++ jit executable cache), so callers must
+        memoize per (program, plan shape, bucket) — ``obs.profile`` does.
+        Always lowers the cold-start variant: a warm-started dispatch is
+        the same superstep loop with a different init, cost-identical to
+        first order."""
+        steps = _steps(prog, max_supersteps)
+        kw = {k: jnp.asarray(v) for k, v in kw.items()}
+        if batched_kw is None:
+            if self.mesh is None:
+                lowered = _run_single.lower(
+                    self.plan, prog, kw, None, steps, max_local_iters,
+                    self.use_pallas, self.interpret)
+            else:
+                lowered = _run_sharded.lower(
+                    self._sharded_plan(), kw, None, prog=prog,
+                    mesh=self.mesh, axis=self.axis,
+                    k_local=self._k_local(), max_supersteps=steps,
+                    max_local_iters=max_local_iters,
+                    interpret=self.interpret)
+        else:
+            batched_kw = {k: jnp.asarray(v) for k, v in batched_kw.items()}
+            if self.mesh is None:
+                # jit(vmap(...)) compiles the same batched superstep loop
+                # the eager dispatch path executes (jit under vmap fuses
+                # into one XLA computation either way)
+                def one(bkw):
+                    return _run_single(self.plan, prog, {**kw, **bkw},
+                                       None, steps, max_local_iters,
+                                       False, self.interpret)
+
+                lowered = jax.jit(jax.vmap(one)).lower(batched_kw)
+            else:
+                lowered = _run_sharded_batched.lower(
+                    self._sharded_plan(), kw, batched_kw, None, prog=prog,
+                    mesh=self.mesh, axis=self.axis,
+                    k_local=self._k_local(), max_supersteps=steps,
+                    max_local_iters=max_local_iters,
+                    interpret=self.interpret)
+        return lowered.compile().as_text()
+
     # -- shard_map plumbing -------------------------------------------------
     def _k_local(self) -> int:
         ndev = self.mesh.shape[self.axis]

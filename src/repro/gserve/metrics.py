@@ -41,6 +41,24 @@ from ..obs.histogram import LogHistogram, WindowedHistogram
 # stable at bench qps, short enough to reflect "now" during an incident.
 SNAPSHOT_WINDOW_S = 10.0
 
+# Process-lifetime execute-span totals across every server ever created —
+# benchmarks/run.py prints the per-figure delta next to wall-clock, the
+# same way it attributes recorder events from lifetime counts.  The
+# windowed ring gives the same spend over a trailing window, so a live
+# summary can show "device time now" next to the monotone total.
+_EXEC_TOTALS = {"device_s": 0.0, "executes": 0}
+_EXEC_WINDOW = WindowedHistogram(slot_s=0.5, slots=60)
+_EXEC_T0 = time.perf_counter()
+
+
+def exec_totals() -> dict:
+    """Monotone process-wide device-time spend (a copy), plus the
+    trailing-window view of the same execute spans under ``"windowed"``."""
+    d = dict(_EXEC_TOTALS)
+    d["windowed"] = _EXEC_WINDOW.stats(SNAPSHOT_WINDOW_S,
+                                       time.perf_counter() - _EXEC_T0)
+    return d
+
 
 def percentile(xs: list[float], q: float) -> float:
     if not xs:
@@ -65,6 +83,10 @@ class ServeMetrics:
         self.n_lanes_warm = 0          # lanes warm-started from a prior epoch
         self.n_requests_batched = 0    # requests answered by engine runs
         self.n_swaps = 0               # plan-buffer swaps observed
+        self.device_time_s = 0.0       # summed execute-span durations —
+                                       #   the total the ledger's per-tenant
+                                       #   device_s must reconcile against
+        self.n_executes = 0
         self.t0 = time.perf_counter()
 
     # -- recording (called by the server) -----------------------------------
@@ -91,6 +113,15 @@ class ServeMetrics:
 
     def record_swap(self) -> None:
         self.n_swaps += 1
+
+    def record_execute(self, dt_s: float) -> None:
+        """One completed execute span: device sync wall time."""
+        v = float(dt_s)
+        self.device_time_s += v
+        self.n_executes += 1
+        _EXEC_TOTALS["device_s"] += v
+        _EXEC_TOTALS["executes"] += 1
+        _EXEC_WINDOW.record(v, now=time.perf_counter() - _EXEC_T0)
 
     # -- reporting -----------------------------------------------------------
     def snapshot(self, result_cache_stats: dict | None = None) -> dict:
@@ -121,6 +152,8 @@ class ServeMetrics:
                 "p99_s": round(win["p99"], 6),
             },
             "batches": self.n_batches,
+            "device_time_s": round(self.device_time_s, 6),
+            "executes": self.n_executes,
             "mean_batch_occupancy": round(occ, 3),
             "pad_waste_frac": round(pad_waste, 4),
             "result_cache_hits": self.n_cache_hits,

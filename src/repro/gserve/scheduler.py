@@ -19,6 +19,10 @@ Coalescing rules (request.batch_key — derived from the program registry):
 
 Queues are FIFO per batch key and keys are drained in arrival order of
 their oldest request, so no tenant's query class can starve another's.
+When the server wires a usage ledger, draining becomes cost-weighted
+(``cost_of``): keys whose head tenant has burned the smallest recent
+device-time share flush first, so cheap tenants are not stuck behind a
+heavy tenant's backlog.
 
 Timer-based flush: ``next_batch(max_wait_s=...)`` *defers* a batchable key
 that cannot yet fill the largest bucket — until its oldest request has
@@ -86,6 +90,11 @@ class MicroBatcher:
         self._arrival = 0
         self._order: dict[tuple, int] = {}   # key -> oldest arrival seq
         self._tenant = collections.Counter()  # tenant -> pending requests
+        # cost-weighted flush ordering: when the server wires a usage
+        # ledger, cost_of maps tenant -> recent device-time share and keys
+        # drain cheapest-head-tenant first (FIFO breaks the tie), so a
+        # tenant monopolizing the device queues behind everyone it starved
+        self.cost_of: "collections.abc.Callable[[str], float] | None" = None
 
     def __len__(self) -> int:
         return sum(len(q) for q in self._queues.values())
@@ -109,10 +118,16 @@ class MicroBatcher:
         self._arrival += 1
 
     def _live_keys(self) -> list[tuple]:
-        """Keys with queued requests, oldest head first."""
+        """Keys with queued requests: oldest head first, or — with a
+        ledger-backed ``cost_of`` wired — cheapest head tenant first
+        (arrival order inside one tenant's cost tier)."""
         live = [(seq, key) for key, seq in self._order.items()
                 if self._queues.get(key)]
-        return [key for _, key in sorted(live)]
+        if self.cost_of is None:
+            return [key for _, key in sorted(live)]
+        ranked = sorted((self.cost_of(self._queues[key][0][0].tenant),
+                         seq, key) for seq, key in live)
+        return [key for _, _, key in ranked]
 
     def next_batch(self, now: float | None = None,
                    max_wait_s: float | None = None) -> MicroBatch | None:

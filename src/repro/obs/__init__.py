@@ -12,8 +12,13 @@ half: mergeable log-bucketed histograms (``LogHistogram`` /
 ``WindowedHistogram``), a multi-window burn-rate SLO ``Monitor`` that
 emits first-class ``obs.alert`` events, and a ``FlightRecorder`` that
 dumps bounded postmortem bundles the instant an alert fires (render with
-``python -m repro.obs.report``).  See src/repro/obs/README.md for the
-event schema, span/alert taxonomy and overhead contract.
+``python -m repro.obs.report``), and the cost-attribution layer:
+static per-executable ``CostModel``s from post-optimization HLO
+(``obs.profile``) joined with measured execute spans into a mergeable
+per-tenant ``CostLedger`` (``obs.ledger``, render with ``python -m
+repro.obs.usage``) that prices cost-aware admission in gserve.  See
+src/repro/obs/README.md for the event schema, span/alert taxonomy,
+ledger schema and overhead contract.
 
 Typical use::
 
@@ -27,14 +32,17 @@ from .export import export_chrome_trace, export_jsonl
 from .flight import FlightRecorder
 from .health import plan_health
 from .histogram import LogHistogram, WindowedHistogram
+from .ledger import CostLedger, CostSample, get_ledger
 from .monitor import GaugeWatch, Monitor, SLOPolicy
+from .profile import CostModel, cost_model
 from .recorder import Recorder, get
 
 __all__ = [
-    "FlightRecorder", "GaugeWatch", "LogHistogram", "Monitor", "Recorder",
-    "SLOPolicy", "WindowedHistogram", "disable", "enable", "event",
-    "export_chrome_trace", "export_jsonl", "get", "plan_health", "reset",
-    "snapshot",
+    "CostLedger", "CostModel", "CostSample", "FlightRecorder",
+    "GaugeWatch", "LogHistogram", "Monitor", "Recorder", "SLOPolicy",
+    "WindowedHistogram", "cost_model", "disable", "enable", "event",
+    "export_chrome_trace", "export_jsonl", "get", "get_ledger",
+    "plan_health", "reset", "snapshot",
 ]
 
 

@@ -4,8 +4,13 @@
 scanned layer stacks / flash-scan loops are undercounted; and it reports no
 collective traffic at all. This parser recovers:
 
-  * exact matmul FLOPs  — every ``dot`` op: 2 · |out| · K, K from the lhs
+  * matmul FLOPs        — every ``dot`` op: 2 · |out| · K, K from the lhs
     contracting dims, multiplied through nested while-loop trip counts;
+  * elementwise FLOPs   — the graph engine's executables contain *zero*
+    ``dot`` ops (its compute is gather → segment-reduce → elementwise
+    apply), so arithmetic elementwise ops count one flop per output
+    element and reductions (``reduce`` / ``reduce-window`` / ``scatter``)
+    one per *input* element, fusion bodies included;
   * HBM byte traffic    — Σ (operand + output bytes) of every instruction
     (an upper bound proxy for memory traffic: assumes no fusion reuse
     between instructions; fusions are single instructions so intra-fusion
@@ -14,8 +19,19 @@ collective traffic at all. This parser recovers:
     reduce-scatter / all-to-all / collective-permute (operand), again
     trip-multiplied.
 
-Loop trip counts come from the largest s32 constant in the loop's condition
-computation (XLA canonical form: ``compare(iv, constant(N)), direction=LT``).
+Loop trip counts come from XLA's ``known_trip_count`` backend config, with
+the largest s32 constant in the loop's condition computation as fallback
+(canonical form: ``compare(iv, constant(N)), direction=LT``).  For the
+engine's data-dependent fixpoint loops the recovered trips are the loop
+*caps* (worst case); ``analyze_hlo(..., trip_clamp=1)`` clamps every loop
+to one trip, yielding a *per-sweep* cost that callers scale by measured
+superstep/local-iteration counts (``repro.obs.profile`` does exactly
+that).
+
+Robustness contract: profiling must never break a compile.  Instructions
+whose opcode the model does not know — and instructions whose text this
+parser chokes on — degrade into the counted ``unmodeled_ops`` field of
+``HloCosts`` instead of raising mid-analysis.
 """
 from __future__ import annotations
 
@@ -204,6 +220,66 @@ _COLL_OPS = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
              "collective-permute-start", "all-to-all-start",
              "reduce-scatter-start"}
 
+# Arithmetic elementwise ops: one flop per OUTPUT element.  This is the
+# whole compute model for the graph engine's executables (gather →
+# segment-reduce → apply lowers to compare/select/min/add chains — no dot
+# ops anywhere), observed by opcode census of the compiled SSSP/PageRank
+# superstep loops.
+_EW_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "remainder", "power",
+    "maximum", "minimum", "compare", "select", "clamp", "and", "or",
+    "xor", "not", "negate", "abs", "sign", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "sqrt", "rsqrt",
+    "cbrt", "tanh", "logistic", "sine", "cosine", "tan", "atan2",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "is-finite", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "popcnt", "count-leading-zeros",
+}
+# Reductions: one flop per INPUT element of the reduced operand (each
+# input element passes through the combiner once, to first order).
+_REDUCE_FLOP_OPS = {"reduce", "reduce-window", "scatter",
+                    "select-and-scatter"}
+# Known zero-flop ops: data movement, layout, and control structure.  The
+# bytes proxy still charges their traffic; they are *modeled*, just free.
+_MOVEMENT_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "broadcast", "copy", "copy-start", "copy-done",
+    "reshape", "transpose", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "gather", "iota", "convert",
+    "pad", "reverse", "rng", "rng-bit-generator", "while", "conditional",
+    "call", "fusion", "map", "sort", "after-all", "partition-id",
+    "replica-id", "domain", "optimization-barrier", "add-dependency",
+    "get-dimension-size", "real", "imag", "complex", "send", "send-done",
+    "recv", "recv-done", "infeed", "outfeed", "all-reduce-done",
+    "all-gather-done", "collective-permute-done", "all-to-all-done",
+    "reduce-scatter-done",
+}
+
+
+def tensor_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def _elementwise_flops(ins: Instr, sym: dict) -> float:
+    """Non-dot flop model: |out| for arithmetic elementwise ops, |input|
+    for reductions, 0 for known movement/structure.  Raises KeyError for
+    an opcode it does not know — the caller counts it as unmodeled."""
+    if ins.op in _EW_FLOP_OPS:
+        return float(tensor_elems(ins.type_str))
+    if ins.op in _REDUCE_FLOP_OPS:
+        ops = _first_operands(ins, sym, 1)
+        return float(tensor_elems(ops[0])) if ops and ops[0] else 0.0
+    if ins.op in _MOVEMENT_OPS or ins.op == "dot" or ins.op in _COLL_OPS \
+            or ins.op.endswith("-done"):
+        return 0.0
+    raise KeyError(ins.op)
+
 
 def _coll_bytes(ins: Instr, sym: dict) -> float:
     base = ins.op.replace("-start", "")
@@ -224,39 +300,64 @@ class HloCosts:
     coll_bytes: float
     coll_breakdown: dict
     loop_trips: dict
+    unmodeled_ops: int = 0          # instructions the flop model does not
+                                    #   know (or whose text choked the
+                                    #   parser), trip-multiplied — counted,
+                                    #   never raised
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """flops per HBM byte — the roofline x-axis."""
+        return self.flops / max(self.bytes_traffic, 1.0)
 
 
-def analyze_hlo(hlo: str) -> HloCosts:
+def analyze_hlo(hlo: str, trip_clamp: int | None = None) -> HloCosts:
+    """Walk the computation graph and accumulate roofline terms.
+
+    ``trip_clamp`` clamps every while-loop trip count (the recovered trips
+    are loop *caps* for data-dependent fixpoint loops); ``trip_clamp=1``
+    yields the cost of one sweep through every loop body, which callers
+    scale by measured iteration counts."""
     comps = parse(hlo)
     trips = _loop_trips(comps)
+    if trip_clamp is not None:
+        trips = {k: min(v, max(int(trip_clamp), 1)) for k, v in trips.items()}
 
-    flops_memo: dict[str, tuple] = {}
+    memo: dict[str, tuple] = {}
 
     def walk(name: str) -> tuple:
-        if name in flops_memo:
-            return flops_memo[name]
-        flops_memo[name] = (0.0, 0.0, 0.0, defaultdict(float))  # cycle guard
+        if name in memo:
+            return memo[name]
+        memo[name] = (0.0, 0.0, 0.0, defaultdict(float), 0)  # cycle guard
         comp = comps.get(name)
         if comp is None:
-            return flops_memo[name]
+            return memo[name]
         fl = by = cb = 0.0
+        unmod = 0
         breakdown: dict = defaultdict(float)
         for ins in comp.instrs:
-            if ins.op == "dot":
-                fl += _dot_flops(ins, comp.sym)
-            if ins.op in _COLL_OPS and not ins.op.endswith("-done"):
-                b = _coll_bytes(ins, comp.sym)
-                cb += b
-                breakdown[ins.op.replace("-start", "")] += b
-            # bytes proxy: operands + output of every instruction
-            if ins.op not in ("parameter", "constant", "tuple",
-                              "get-tuple-element", "bitcast"):
-                by += tensor_bytes(ins.type_str)
-                for t in _first_operands(ins, comp.sym, 3):
-                    by += tensor_bytes(t)
+            # a single opaque instruction must degrade, not abort: the
+            # analyzer runs against whatever HLO the compiler emitted
+            try:
+                if ins.op == "dot":
+                    fl += _dot_flops(ins, comp.sym)
+                else:
+                    fl += _elementwise_flops(ins, comp.sym)
+                if ins.op in _COLL_OPS and not ins.op.endswith("-done"):
+                    b = _coll_bytes(ins, comp.sym)
+                    cb += b
+                    breakdown[ins.op.replace("-start", "")] += b
+                # bytes proxy: operands + output of every instruction
+                if ins.op not in ("parameter", "constant", "tuple",
+                                  "get-tuple-element", "bitcast"):
+                    by += tensor_bytes(ins.type_str)
+                    for t in _first_operands(ins, comp.sym, 3):
+                        by += tensor_bytes(t)
+            except Exception:
+                unmod += 1
             is_fusion = ins.op == "fusion"
             for callee in _callees(ins):
-                cf, cby, ccb, cbrk = walk(callee)
+                cf, cby, ccb, cbrk, cum = walk(callee)
                 mult = trips.get(callee, 1) if callee in trips else 1
                 fl += cf * mult
                 # fusion bodies execute in registers/VMEM: their internal
@@ -265,13 +366,14 @@ def analyze_hlo(hlo: str) -> HloCosts:
                 if not is_fusion:
                     by += cby * mult
                 cb += ccb * mult
+                unmod += cum * mult
                 for k, v in cbrk.items():
                     breakdown[k] += v * mult
-        flops_memo[name] = (fl, by, cb, breakdown)
-        return flops_memo[name]
+        memo[name] = (fl, by, cb, breakdown, unmod)
+        return memo[name]
 
     entry = next((c.name for c in comps.values() if c.entry), None)
     if entry is None:
-        return HloCosts(0.0, 0.0, 0.0, {}, trips)
-    fl, by, cb, brk = walk(entry)
-    return HloCosts(fl, by, cb, dict(brk), trips)
+        return HloCosts(0.0, 0.0, 0.0, {}, trips, 0)
+    fl, by, cb, brk, unmod = walk(entry)
+    return HloCosts(fl, by, cb, dict(brk), trips, unmod)
