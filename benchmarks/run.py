@@ -148,6 +148,23 @@ def main() -> None:
         print(f"### global cost ledger: {lt['requests']} requests in "
               f"{lt['series']} series, {lt['device_s']:.2f} device-s, "
               f"{lt['flops']:.3g} flops")
+    # static-analysis footer: the bench summary carries the same invariant
+    # gate CI enforces, so a local --all run can't look green while the
+    # tree has unsuppressed analyzer findings
+    try:
+        from repro.analysis import run_clean
+        src_root = pathlib.Path(__file__).resolve().parents[1] / "src/repro"
+        ok = run_clean(str(src_root))
+        verdict = "PASS" if ok else \
+            "FAIL — run `python -m repro.analysis src/repro` for findings"
+        print(f"### static analysis (repro.analysis): {verdict}",
+              flush=True)
+        if not ok:
+            failures.append("analysis")
+    except Exception as e:  # pragma: no cover — never mask bench results
+        print(f"### static analysis (repro.analysis): ERROR ({e})",
+              flush=True)
+
     if failures:
         print(f"\n### {len(failures)} benchmark(s) crashed: "
               f"{', '.join(failures)}", flush=True)

@@ -1,0 +1,19 @@
+"""repro.analysis — AST invariant checker for the repro codebase.
+
+Stdlib-only static analysis enforcing the invariants the test suite can't
+see until they bite at runtime: jit-trace purity (TS*), retrace/cache-key
+hazards (RH*), lock discipline (LD*), view-aliasing freshness (AL*), and
+layering/purity (LP*).  Replaces the CI grep guards.
+
+CLI:   python -m repro.analysis [roots...] [--format json] [-o report.json]
+Test:  repro.analysis.run_clean("src/repro") — the tier-1 gate.
+Docs:  src/repro/analysis/README.md — rule catalogue with the incident
+       motivating each rule.
+"""
+from . import rules as _rules  # noqa: F401  (registers the catalogue)
+from .base import Finding, all_rules, module_info
+from .runner import main, run_clean, scan
+from .suppressions import Suppression, SuppressionError, parse
+
+__all__ = ["Finding", "Suppression", "SuppressionError", "all_rules",
+           "main", "module_info", "parse", "run_clean", "scan"]

@@ -1,0 +1,145 @@
+"""Aliasing rule: owner state that gets mutated in place must be fresh.
+
+Incident record: PR 7's ``StreamSession`` assigned the array returned by
+``local_reauction`` straight to ``self.owner``.  That array is a
+jax-backed, read-only view; the next in-place ``self.owner[idx] = p``
+raised ``ValueError: assignment destination is read-only`` — but only on
+the first *streamed* update after a re-auction, which no unit test hit.
+The shipped fix wraps it in ``np.array(...)`` (a writable copy); AL001
+makes the bug class unrepresentable.
+
+Scope: classes in ``stream/`` modules.  For each ``self.<attr>`` that the
+class mutates in place (``self.attr[...] = ...``, ``self.attr += ...``,
+or mutating method calls), every assignment ``self.attr = <expr>`` must be
+*provably fresh*: a copying constructor (``np.array``, ``np.copy``,
+``np.zeros/ones/full/empty/arange/concatenate/stack``, ``.copy()``,
+``list()/dict()/set()`` displays), or a local name that was itself
+assigned fresh in the same function (slices of fresh stay fresh).
+``np.asarray`` is *not* fresh — it is a documented no-copy passthrough,
+which is exactly how the incident array sneaked in.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .base import Finding, ModuleInfo, Rule, dotted, register_rule
+
+_FRESH_NP = {"array", "copy", "zeros", "ones", "full", "empty", "arange",
+             "concatenate", "stack", "zeros_like", "ones_like",
+             "full_like", "empty_like", "repeat", "tile", "where"}
+_MUTATORS = {"append", "add", "update", "pop", "clear", "setdefault",
+             "remove", "discard", "extend", "insert", "fill", "sort",
+             "resize", "put"}
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _is_fresh(expr: ast.AST, fresh_locals: set[str]) -> bool:
+    """Provably returns a newly allocated, writable object."""
+    if isinstance(expr, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp, ast.Constant)):
+        return True
+    if isinstance(expr, ast.Name):
+        return expr.id in fresh_locals
+    if isinstance(expr, ast.Subscript):
+        # a slice of a fresh array is a view *of a writable array* — fine
+        return _is_fresh(expr.value, fresh_locals)
+    if isinstance(expr, ast.BinOp):
+        return True               # arithmetic allocates a new array
+    if isinstance(expr, ast.Call):
+        # method tails are checked on the raw Attribute so chains whose
+        # base is itself a call — np.asarray(x).copy() — still count
+        if isinstance(expr.func, ast.Attribute):
+            if expr.func.attr == "copy" and not expr.args:    # x.copy()
+                return True
+            if expr.func.attr in ("astype", "tolist"):        # copies
+                return True
+        d = dotted(expr.func) or ""
+        head, _, tail = d.rpartition(".")
+        if head in ("np", "numpy") and tail in _FRESH_NP:
+            return True
+        if d in ("list", "dict", "set", "bytearray", "sorted"):
+            return True
+    return False
+
+
+def _function_fresh_locals(fn: ast.AST) -> set[str]:
+    """Local names assigned a fresh expression anywhere in fn (single
+    forward pass; sufficient for straight-line construction code)."""
+    fresh: set[str] = set()
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Assign) and len(sub.targets) == 1 and \
+                isinstance(sub.targets[0], ast.Name):
+            if _is_fresh(sub.value, fresh):
+                fresh.add(sub.targets[0].id)
+            else:
+                fresh.discard(sub.targets[0].id)
+    return fresh
+
+
+class StaleViewAssignment(Rule):
+    id = "AL001"
+    family = "aliasing"
+    name = "non-fresh-assignment-to-mutated-owner-field"
+    summary = ("in stream/ classes, fields mutated in place must only be "
+               "assigned provably-fresh arrays (np.array/.copy()); "
+               "jax-backed returns are read-only views — the PR 7 "
+               "local_reauction ValueError class")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if mod.subsystem != "stream":
+            return
+        for cls in ast.walk(mod.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            mutated: set[str] = set()
+            for sub in ast.walk(cls):
+                if isinstance(sub, (ast.Assign, ast.AugAssign)):
+                    targets = sub.targets if isinstance(sub, ast.Assign) \
+                        else [sub.target]
+                    for t in targets:
+                        if isinstance(t, ast.Subscript):
+                            attr = _self_attr(t.value)
+                            if attr:
+                                mutated.add(attr)
+                        elif isinstance(sub, ast.AugAssign):
+                            attr = _self_attr(t)
+                            if attr:
+                                mutated.add(attr)
+                elif isinstance(sub, ast.Call) and \
+                        isinstance(sub.func, ast.Attribute) and \
+                        sub.func.attr in _MUTATORS:
+                    attr = _self_attr(sub.func.value)
+                    if attr:
+                        mutated.add(attr)
+            if not mutated:
+                continue
+            for m in cls.body:
+                if not isinstance(m, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    continue
+                fresh = _function_fresh_locals(m)
+                for sub in ast.walk(m):
+                    if not isinstance(sub, ast.Assign):
+                        continue
+                    for t in sub.targets:
+                        attr = _self_attr(t)
+                        if attr in mutated and \
+                                not _is_fresh(sub.value, fresh):
+                            yield self.finding(
+                                mod, sub, f"{cls.name}.{m.name}",
+                                f"self.{attr} is mutated in place "
+                                f"elsewhere in {cls.name} but this "
+                                "assignment is not provably fresh — a "
+                                "jax-backed/read-only view here raises on "
+                                "the next in-place write; wrap in "
+                                "np.array(...)")
+
+
+register_rule(StaleViewAssignment())

@@ -1,0 +1,246 @@
+"""Trace-safety rules: keep the jit-traced hot path pure and cheap.
+
+Incident record (the reason this family exists): PR 6's first cut of the
+engine instrumentation computed ``jnp.max``/``jnp.all`` reductions while
+building recorder event arguments.  Each served result then dispatched a
+fresh single-op XLA computation on the host-sync path and the observability
+overhead benchmark blew its 3% budget.  The fix (numpy on already-synced
+host arrays) is now enforced mechanically:
+
+TS001  no ``jnp.*`` calls inside recorder event/span/counter arguments;
+TS002  no host syncs (``np.asarray``/``np.array``/``.item()``/``.tolist()``/
+       ``jax.device_get``/``float(jnp...)``) inside functions reachable from
+       a ``jit``/``shard_map``/``pallas_call`` trace;
+TS003  no Python ``if``/``while``/``assert``/ternary on a traced value
+       (a ``jnp.*`` expression) inside those same functions — data-dependent
+       Python control flow either crashes under jit or silently retraces.
+
+"Reachable from a trace" is computed per module: roots are functions
+decorated with (or passed to) ``jax.jit``/``shard_map``/``pl.pallas_call``/
+``jax.vmap``, or passed as the body/cond of ``lax.while_loop``/``scan``/
+``cond``/``fori_loop`` — plus every module-local function they call,
+transitively.  A host driver that merely *calls* ``lax.scan(step, ...)``
+is not traced; ``step`` is.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .base import (Finding, ImportMap, ModuleInfo, Rule, dotted,
+                   qualname_at, register_rule, walk_functions)
+
+# subsystems whose modules run (partly) under jax tracing
+TRACED_SUBSYSTEMS = ("engine", "kernels", "core")
+
+_RECORDER_METHODS = {"event", "gauge", "counter", "begin", "end"}
+_TRACER_HEADS = {"jax.jit", "jit", "jax.experimental.shard_map.shard_map",
+                 "shard_map", "pl.pallas_call", "pallas_call",
+                 "jax.experimental.pallas.pallas_call", "jax.vmap", "vmap"}
+_TRACER_CALL_TAILS = {"jit", "pallas_call", "shard_map", "vmap",
+                      "while_loop", "scan", "fori_loop", "cond"}
+_SYNC_ATTRS = {"item", "tolist"}
+_JNP_MODULES = {"jnp", "jax.numpy"}
+
+
+def _is_jnp_call(node: ast.AST, imports: ImportMap) -> bool:
+    """True for any ``jnp.<op>(...)`` (alias-aware) in the subtree."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            d = dotted(sub.func)
+            if d and imports.resolve(d.split(".")[0]) == "jax.numpy":
+                return True
+            if d and d.rsplit(".", 1)[0] in _JNP_MODULES:
+                return True
+    return False
+
+
+def _callee_names(call: ast.Call) -> Iterator[str]:
+    """Bare function names referenced anywhere in a call's arguments
+    (covers ``jit(f)``, ``partial(jit, f)``, ``pallas_call(partial(k))``)."""
+    for sub in ast.walk(call):
+        if isinstance(sub, ast.Name):
+            yield sub.id
+
+
+def traced_functions(mod: ModuleInfo) -> dict[str, ast.AST]:
+    """qualname -> node for every function reachable from a trace root."""
+    imports = ImportMap(mod)
+    funcs = dict(walk_functions(mod.tree))
+    by_name: dict[str, list[str]] = {}
+    for q, fn in funcs.items():
+        by_name.setdefault(q.rsplit(".", 1)[-1], []).append(q)
+
+    roots: set[str] = set()
+    for q, fn in funcs.items():
+        for dec in fn.decorator_list:
+            flat = ast.unparse(dec)
+            if any(h.split(".")[-1] in flat.split("(")[0].replace(
+                    ")", "").split(",")[-1] or h in flat
+                   for h in ("jit", "pallas_call", "shard_map")) and \
+                    ("jit" in flat or "pallas_call" in flat
+                     or "shard_map" in flat):
+                roots.add(q)
+    # functions *passed to* a tracer anywhere in the module become roots.
+    # Note the enclosing function is deliberately NOT a root: a host
+    # driver that calls jax.lax.scan(step, ...) runs eagerly — only
+    # ``step`` is traced.  (The PR 6-era grep could not make this
+    # distinction; the first cut of this rule couldn't either and flagged
+    # every reference oracle that orchestrates a scan.)
+    for sub in ast.walk(mod.tree):
+        if isinstance(sub, ast.Call):
+            d = dotted(sub.func) or ""
+            if d.split(".")[-1] in _TRACER_CALL_TAILS:
+                for name in _callee_names(sub):
+                    for cand in by_name.get(name, ()):
+                        roots.add(cand)
+
+    # nested functions inherit their parent's traced-ness; plus fixpoint
+    # over module-local calls by bare name
+    traced = set(roots)
+    changed = True
+    while changed:
+        changed = False
+        for q, fn in funcs.items():
+            if q in traced:
+                continue
+            parent = q.rsplit(".", 1)[0] if "." in q else None
+            if parent in traced:
+                traced.add(q)
+                changed = True
+                continue
+        for q in list(traced):
+            fn = funcs[q]
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Call) and \
+                        isinstance(sub.func, ast.Name):
+                    for cand in by_name.get(sub.func.id, ()):
+                        if cand not in traced:
+                            traced.add(cand)
+                            changed = True
+    return {q: funcs[q] for q in traced}
+
+
+class JnpInRecorderArgs(Rule):
+    id = "TS001"
+    family = "trace-safety"
+    name = "jnp-in-recorder-args"
+    summary = ("recorder event/span/counter arguments must not call jnp.* "
+               "(each call dispatches a fresh XLA computation per event — "
+               "the PR 6 overhead regression); use numpy on synced values")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        imports = ImportMap(mod)
+        # local names bound to the process recorder: ``rec = _obs.get()``
+        rec_names: set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                d = dotted(node.value.func) or ""
+                if d.endswith(".get") and ("obs" in d or "rec" in d):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            rec_names.add(t.id)
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _RECORDER_METHODS):
+                continue
+            recv = node.func.value
+            is_rec = (isinstance(recv, ast.Name) and recv.id in rec_names)
+            if not is_rec and isinstance(recv, ast.Call):
+                d = dotted(recv.func) or ""
+                is_rec = d.endswith(".get") and ("obs" in d or "rec" in d)
+            if not is_rec:
+                continue
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                if _is_jnp_call(arg, imports):
+                    yield self.finding(
+                        mod, arg, qualname_at(mod.tree, node),
+                        f"jnp.* call inside recorder .{node.func.attr}() "
+                        "arguments dispatches an XLA computation per "
+                        "recorded event; reduce with numpy on synced host "
+                        "arrays instead")
+                    break
+
+
+class HostSyncInTrace(Rule):
+    id = "TS002"
+    family = "trace-safety"
+    name = "host-sync-in-traced-function"
+    summary = ("no np.asarray/np.array/.item()/.tolist()/jax.device_get/"
+               "float(jnp...) inside functions reachable from jit/"
+               "shard_map/pallas traces — host syncs break or serialize "
+               "the trace")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if mod.subsystem not in TRACED_SUBSYSTEMS:
+            return
+        imports = ImportMap(mod)
+        for q, fn in traced_functions(mod).items():
+            for sub in ast.walk(fn):
+                if not isinstance(sub, ast.Call):
+                    continue
+                d = dotted(sub.func) or ""
+                resolved = imports.resolve(d) if d else ""
+                if resolved in ("numpy.asarray", "numpy.array") or \
+                        d in ("np.asarray", "np.array"):
+                    yield self.finding(
+                        mod, sub, q,
+                        f"{d}() inside traced function {q!r} forces a "
+                        "device->host sync at runtime (or freezes a traced "
+                        "value at trace time); use jnp")
+                elif resolved == "jax.device_get" or d == "jax.device_get":
+                    yield self.finding(
+                        mod, sub, q,
+                        f"jax.device_get inside traced function {q!r}")
+                elif isinstance(sub.func, ast.Attribute) and \
+                        sub.func.attr in _SYNC_ATTRS and not sub.args:
+                    yield self.finding(
+                        mod, sub, q,
+                        f".{sub.func.attr}() inside traced function {q!r} "
+                        "forces a host sync")
+                elif isinstance(sub.func, ast.Name) and \
+                        sub.func.id in ("float", "int", "bool") and \
+                        sub.args and _is_jnp_call(sub.args[0], imports):
+                    yield self.finding(
+                        mod, sub, q,
+                        f"{sub.func.id}(jnp...) inside traced function "
+                        f"{q!r} concretizes a traced value (host sync / "
+                        "TracerConversionError)")
+
+
+class TracedBranch(Rule):
+    id = "TS003"
+    family = "trace-safety"
+    name = "python-branch-on-traced-value"
+    summary = ("no Python if/while/assert/ternary on a jnp.* expression "
+               "inside traced functions — use lax.cond/while_loop/select "
+               "(data-dependent Python control flow retraces or crashes)")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if mod.subsystem not in TRACED_SUBSYSTEMS:
+            return
+        imports = ImportMap(mod)
+        for q, fn in traced_functions(mod).items():
+            for sub in ast.walk(fn):
+                test = None
+                kind = None
+                if isinstance(sub, (ast.If, ast.While)):
+                    test, kind = sub.test, type(sub).__name__.lower()
+                elif isinstance(sub, ast.IfExp):
+                    test, kind = sub.test, "ternary"
+                elif isinstance(sub, ast.Assert):
+                    test, kind = sub.test, "assert"
+                if test is None or not _is_jnp_call(test, imports):
+                    continue
+                yield self.finding(
+                    mod, sub, q,
+                    f"Python {kind} on a jnp.* expression inside traced "
+                    f"function {q!r}: data-dependent control flow must go "
+                    "through lax.cond/lax.while_loop/jnp.where")
+
+
+register_rule(JnpInRecorderArgs())
+register_rule(HostSyncInTrace())
+register_rule(TracedBranch())

@@ -250,7 +250,8 @@ class GraphServer:
         expires, shares = self._shares_cache
         if now >= expires:
             shares = led.tenant_shares(led.window_s)
-            self._shares_cache = (now + 0.05, shares)
+            with self._lock:   # set_ledger swaps this tuple under the lock
+                self._shares_cache = (now + 0.05, shares)
         return shares
 
     def _cost_of(self, tenant: str) -> float:

@@ -60,7 +60,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     n_chips = mesh.size
     rec = {"arch": arch, "shape": shape_name, "perf": perf,
            "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips}
-    t0 = time.time()
+    t0 = time.perf_counter()
     with use_mesh(mesh) as env:
         spec = input_specs(arch, shape_name)
         cfg, shape = spec["cfg"], spec["shape"]
@@ -115,10 +115,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                           donate_argnums=(2,))   # in-place cache update
             lowered = jfn.lower(*args)
 
-        rec["lower_s"] = round(time.time() - t0, 1)
-        t1 = time.time()
+        rec["lower_s"] = round(time.perf_counter() - t0, 1)
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-        rec["compile_s"] = round(time.time() - t1, 1)
+        rec["compile_s"] = round(time.perf_counter() - t1, 1)
 
         mem = compiled.memory_analysis()
         try:

@@ -75,7 +75,7 @@ class Trainer:
         metrics = {}
         while self.step < self.tcfg.steps:
             batch = self.pipeline.batch_at(self.step)
-            t0 = time.time()
+            t0 = time.perf_counter()
             for attempt in range(self.tcfg.max_retries + 1):
                 try:
                     self.params, self.opt_state, metrics = jax.block_until_ready(
@@ -86,7 +86,7 @@ class Trainer:
                         raise
                     log.warning("step %d failed (%s); retry %d",
                                 self.step, e, attempt + 1)
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             times.append(dt)
             if len(times) > 16:
                 med = statistics.median(times[-64:])

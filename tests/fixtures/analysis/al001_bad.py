@@ -1,0 +1,16 @@
+# analysis-virtual-path: stream/owner.py
+"""AL001 bad: a possibly read-only return value assigned to a field the
+class mutates in place."""
+import numpy as np
+
+
+class OwnerTable:
+    def __init__(self, owner):
+        self.owner = np.array(owner)
+
+    def reauction(self, region):
+        # jax-backed, read-only view assigned to an in-place-mutated field
+        self.owner = region.local_reauction()  # FLAG: AL001
+
+    def apply(self, idx, p):
+        self.owner[idx] = p

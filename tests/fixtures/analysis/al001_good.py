@@ -1,0 +1,15 @@
+# analysis-virtual-path: stream/owner.py
+"""AL001 good: every assignment to the mutated field is provably fresh."""
+import numpy as np
+
+
+class OwnerTable:
+    def __init__(self, owner):
+        self.owner = np.asarray(owner).copy()
+
+    def reauction(self, region):
+        new_owner = region.local_reauction()
+        self.owner = np.array(new_owner)   # writable copy
+
+    def apply(self, idx, p):
+        self.owner[idx] = p

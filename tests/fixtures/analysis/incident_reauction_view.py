@@ -1,0 +1,25 @@
+# analysis-virtual-path: stream/session.py
+"""Incident fixture — PR 7 ``_reauction`` read-only-view bug.
+
+``local_reauction`` returns a jax-backed, read-only array.  Assigning it
+straight to ``self.owner`` armed a time bomb: the next slot-level
+in-place write (``self.owner[idx] = p``) raised ``ValueError: assignment
+destination is read-only`` — but only on the first streamed update after
+a re-auction, a path no unit test exercised.  The shipped fix wraps the
+return in ``np.array(...)``; AL001 must flag the original forever."""
+
+
+class StreamSession:
+    def __init__(self, owner):
+        self.owner = list(owner)
+
+    def _reauction(self, g, region):
+        new_owner = local_reauction(g, self.owner, region)
+        self.owner = new_owner  # FLAG: AL001
+
+    def apply_update(self, idx, p):
+        self.owner[idx] = p
+
+
+def local_reauction(g, owner, region):
+    raise NotImplementedError  # stand-in for the real kernel-backed call

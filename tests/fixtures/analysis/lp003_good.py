@@ -1,0 +1,10 @@
+# analysis-virtual-path: core/partition.py
+"""LP003 good: core depends only on core (and the outside world)."""
+import numpy as np
+
+from . import graph
+from .metrics import evaluate
+
+
+def partition(g):
+    return evaluate(graph.validate(g), np.zeros(1))

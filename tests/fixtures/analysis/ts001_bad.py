@@ -1,0 +1,11 @@
+# analysis-virtual-path: engine/instr.py
+"""TS001 bad: jnp reduction computed inside recorder event arguments."""
+import jax.numpy as jnp
+
+from repro import obs as _obs
+
+
+def after_sweep(state):
+    rec = _obs.get()
+    rec.event("engine.sweep", max_state=float(jnp.max(state)))  # FLAG: TS001
+    _obs.get().gauge("engine.norm", jnp.linalg.norm(state))  # FLAG: TS001

@@ -1,0 +1,11 @@
+# analysis-virtual-path: engine/instr.py
+"""TS001 good: reductions done with numpy on already-synced host arrays."""
+import numpy as np
+
+from repro import obs as _obs
+
+
+def after_sweep(state_np):
+    rec = _obs.get()
+    rec.event("engine.sweep", max_state=float(np.max(state_np)))
+    _obs.get().gauge("engine.norm", float(np.linalg.norm(state_np)))

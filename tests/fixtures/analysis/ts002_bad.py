@@ -1,0 +1,23 @@
+# analysis-virtual-path: engine/sweep.py
+"""TS002 bad: host syncs inside a jit-traced function."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=("n",))
+def sweep(state, n):
+    host = np.asarray(state)  # FLAG: TS002
+    total = float(jnp.sum(state))  # FLAG: TS002
+    flat = state.tolist()  # FLAG: TS002
+    return state * total, host, flat
+
+
+def driver(state):
+    return jax.jit(_inner)(state)  # _inner becomes a trace root
+
+
+def _inner(state):
+    return state.item()  # FLAG: TS002

@@ -1,0 +1,18 @@
+# analysis-virtual-path: engine/sweep.py
+"""TS002 good: traced body stays in jnp; syncs happen in the host driver."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=("n",))
+def sweep(state, n):
+    return state * jnp.sum(state)
+
+
+def driver(state):
+    # the driver is NOT traced: it may sync freely after dispatch
+    out = sweep(state, 4)
+    return np.asarray(out), float(out[0])

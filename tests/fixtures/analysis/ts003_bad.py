@@ -1,0 +1,13 @@
+# analysis-virtual-path: engine/converge.py
+"""TS003 bad: Python control flow on traced values inside a jit body."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def converge(state, prev):
+    if jnp.all(state == prev):  # FLAG: TS003
+        return state
+    while jnp.max(jnp.abs(state - prev)) > 1e-6:  # FLAG: TS003
+        prev, state = state, state * 0.5
+    return state

@@ -1,0 +1,13 @@
+# analysis-virtual-path: engine/converge.py
+"""TS003 good: static-Python branches and lax control flow are fine."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def converge(state, prev, axis=None):
+    if prev is None:              # static trace-time branch: legitimate
+        prev = jnp.zeros_like(state)
+    if axis is not None:          # static trace-time branch: legitimate
+        state = state.sum(axis)
+    return jnp.where(state == prev, state, state * 0.5)

@@ -4,7 +4,6 @@ batch -> dispatch -> execute -> materialize), retrace events on a forced
 bucket-shape change, export round-trips (JSONL + Chrome trace schema), and
 partition-health gauges matching the core metrics after a stream patch."""
 import json
-import pathlib
 import time
 
 import numpy as np
@@ -433,16 +432,7 @@ def test_raising_provider_reported_not_fatal():
     assert boom_calls == [1]
 
 
-# ---------------------------------------------------------------------------
-# clock discipline (satellite of the CI hygiene grep)
-# ---------------------------------------------------------------------------
-
-def test_no_wall_clock_calls_in_serving_or_obs_path():
-    root = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
-    offenders = []
-    for pkg in ("gserve", "obs"):
-        for py in sorted((root / pkg).rglob("*.py")):
-            if "time.time()" in py.read_text():
-                offenders.append(str(py))
-    assert not offenders, (
-        f"wall-clock time.time() in monotonic-only packages: {offenders}")
+# Clock discipline (no wall-clock time.time() in measured paths) is
+# enforced repo-wide by the LP002 AST rule (repro.analysis) via
+# tests/test_analysis.py::test_repo_scans_clean — alias-aware, unlike the
+# grep-mirroring test that used to live here.

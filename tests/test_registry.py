@@ -3,7 +3,6 @@ param normalization, warm-state validation, the no-per-kind-branching
 invariant of the serving layer, and the acceptance flow — a program
 registered through the PUBLIC API only runs partition → engine → stream
 patch → serve with zero edits under src/repro/gserve/."""
-import pathlib
 
 import numpy as np
 import pytest
@@ -124,16 +123,9 @@ def test_keys_derive_from_normalized_params():
     assert entry.lane_cache_key(a.params, 9) == ("sssp", ("source", 9))
 
 
-def test_no_kind_string_branching_in_gserve():
-    """CI-guarded invariant, enforced in tier-1 too: the serving layer
-    derives everything from the registry and never branches on program-kind
-    strings NOR on property-channel names/kinds — channels flow through the
-    same derived batch/cache keys and the generic channel_args call."""
-    root = pathlib.Path(__file__).resolve().parents[1] / "src/repro/gserve"
-    offenders = [p.name for p in sorted(root.glob("*.py"))
-                 if 'kind == "' in p.read_text()
-                 or 'channel == "' in p.read_text()]
-    assert not offenders, f"per-kind/per-channel branching in: {offenders}"
+# The no-kind/no-channel-branching invariant is enforced by the LP001
+# AST rule (repro.analysis) via tests/test_analysis.py::test_repo_scans_clean
+# — the grep-mirroring test that lived here is gone with the CI greps.
 
 
 # ---------------------------------------------------------------------------
