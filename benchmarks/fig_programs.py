@@ -97,6 +97,11 @@ def _channel_sweep(g, k: int, n_tenants: int) -> list[dict]:
         if not entry.channel_params or entry.oracle is None \
                 or entry.batchable:
             continue
+        if any(s.channel == "dense" for s in entry.channel_params):
+            # dense operands (e.g. gcn_layer's weight matrix) have
+            # program-specific row counts a generic sweep can't synthesize;
+            # fig_gnn.py exercises those end to end
+            continue
 
         def plane(spec):
             n = g.n_vertices if spec.channel == "vertex" else g.e_pad

@@ -47,8 +47,8 @@ def main() -> None:
     from repro import obs
     from . import (fig5_k_sweep, fig6_diameter, fig7_comparison,
                    fig8_scalability, fig9_sssp, fig10_engine, fig_cost,
-                   fig_obs, fig_programs, fig_serve, fig_serve_mesh,
-                   fig_stream, kernel_bench)
+                   fig_gnn, fig_obs, fig_programs, fig_serve,
+                   fig_serve_mesh, fig_stream, kernel_bench)
 
     all_benches = {
         "fig5": fig5_k_sweep.main,
@@ -63,6 +63,7 @@ def main() -> None:
         "programs": fig_programs.main,
         "obs": fig_obs.main,
         "cost": fig_cost.main,
+        "gnn": fig_gnn.main,
         "kernels": kernel_bench.main,
     }
     # registry completeness: every benchmark module on disk must be wired

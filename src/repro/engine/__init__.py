@@ -7,35 +7,40 @@ everything downstream from the entry. See src/repro/engine/README.md for
 the design and for registering your own program.
 """
 from .errors import (BatchAxisError, ChannelError, DuplicateProgramError,
-                     ParamTypeError, RegistryError, UnknownParamError,
-                     UnknownProgramError, WarmStateError)
+                     ParamTypeError, RegistryError, StateError,
+                     UnknownParamError, UnknownProgramError, WarmStateError)
 from .plan import (PartitionPlan, compile_plan, compile_plan_cached,
                    plan_cache_clear, plan_cache_stats)
 from .registry import (DEFAULT_REGISTRY, ChannelValue, ParamSpec,
                        ProgramEntry, ProgramRegistry, bind_channel,
-                       get_program, program_names, register, unbind_channel,
-                       unregister)
+                       get_program, program_names, register, resident_stats,
+                       unbind_channel, unregister)
 from .runtime import (TRACE_COUNTER, EdgeProgram, Engine, EngineResult,
                       PendingResult)
-from .kernels import gather_edge_channel, gather_vertex_channel
-from .programs import (BFS, LABELPROP, PAGERANK, PPR, SSSP, WCC,
-                       WEIGHTED_SSSP, engine_bfs, engine_label_propagation,
-                       engine_pagerank, engine_personalized_pagerank,
-                       engine_sssp, engine_wcc, engine_weighted_sssp,
-                       multi_source_sssp)
+from .state import SCALAR, StateSpec
+from .kernels import (gather_edge_channel, gather_vertex_channel, gspmm,
+                      gspmm_ref)
+from .programs import (BFS, GCN_LAYER, KGE_SCORE, LABELPROP, PAGERANK, PPR,
+                       SSSP, WCC, WEIGHTED_SSSP, engine_bfs,
+                       engine_gcn_layer, engine_kge_score,
+                       engine_label_propagation, engine_pagerank,
+                       engine_personalized_pagerank, engine_sssp, engine_wcc,
+                       engine_weighted_sssp, multi_source_sssp)
 
 __all__ = [
     "BFS", "BatchAxisError", "ChannelError", "ChannelValue",
     "DEFAULT_REGISTRY", "DuplicateProgramError", "EdgeProgram", "Engine",
-    "EngineResult", "LABELPROP", "PAGERANK", "PPR", "ParamSpec",
-    "ParamTypeError", "PartitionPlan", "PendingResult", "ProgramEntry",
-    "ProgramRegistry", "RegistryError", "SSSP", "TRACE_COUNTER",
-    "UnknownParamError", "UnknownProgramError", "WCC", "WEIGHTED_SSSP",
-    "WarmStateError", "bind_channel", "compile_plan", "compile_plan_cached",
-    "engine_bfs", "engine_label_propagation", "engine_pagerank",
-    "engine_personalized_pagerank", "engine_sssp", "engine_wcc",
-    "engine_weighted_sssp", "gather_edge_channel", "gather_vertex_channel",
-    "get_program", "multi_source_sssp", "plan_cache_clear",
-    "plan_cache_stats", "program_names", "register", "unbind_channel",
+    "EngineResult", "GCN_LAYER", "KGE_SCORE", "LABELPROP", "PAGERANK", "PPR",
+    "ParamSpec", "ParamTypeError", "PartitionPlan", "PendingResult",
+    "ProgramEntry", "ProgramRegistry", "RegistryError", "SCALAR", "SSSP",
+    "StateError", "StateSpec", "TRACE_COUNTER", "UnknownParamError",
+    "UnknownProgramError", "WCC", "WEIGHTED_SSSP", "WarmStateError",
+    "bind_channel", "compile_plan", "compile_plan_cached", "engine_bfs",
+    "engine_gcn_layer", "engine_kge_score", "engine_label_propagation",
+    "engine_pagerank", "engine_personalized_pagerank", "engine_sssp",
+    "engine_wcc", "engine_weighted_sssp", "gather_edge_channel",
+    "gather_vertex_channel", "get_program", "gspmm", "gspmm_ref",
+    "multi_source_sssp", "plan_cache_clear", "plan_cache_stats",
+    "program_names", "register", "resident_stats", "unbind_channel",
     "unregister",
 ]

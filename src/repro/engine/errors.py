@@ -40,12 +40,23 @@ class BatchAxisError(RegistryError):
     """
 
 
-class WarmStateError(RegistryError):
+class StateError(RegistryError):
+    """Base class for state-plane shape violations at the server door.
+
+    A program's per-vertex state rank is declared by its ``StateSpec``
+    (PR 10); every array whose shape must agree with that declaration —
+    warm-start blocks, bound channel planes — raises a ``StateError``
+    subclass when it does not, instead of a reshape crash inside jit.
+    """
+
+
+class WarmStateError(StateError):
     """``warm_state`` was passed to a program without a ``warm_init`` hook,
-    or its shape does not match the plan's vertex space."""
+    or its shape does not match the plan's vertex space under the
+    program's ``StateSpec`` (wrong vertex count *or* wrong feature rank)."""
 
 
-class ChannelError(RegistryError):
+class ChannelError(StateError):
     """A property-channel value is malformed: wrong rank/feature width at
     construction, or — at dispatch — a plane whose leading length does not
     match the plan it is being served against (e.g. a ``[V, F]`` vertex

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the partition-local engine layout.
 
-Two kernels, both specialized to the ``PartitionPlan`` CSR blocks:
+Three kernels, all specialized to the ``PartitionPlan`` CSR blocks:
 
 ``segment_reduce``
     The gather/aggregate hot-spot of a superstep: reduce per-half-edge
@@ -16,14 +16,29 @@ Two kernels, both specialized to the ``PartitionPlan`` CSR blocks:
     ``plan.last_slot`` (a plain gather; padding slots hold the identity
     because the padding region starts a fresh identity-valued segment).
 
+``gspmm``
+    The fused GNN hot path (PR 10): gather neighbour feature rows,
+    multiply by per-half-edge weights (scalar or per-feature planes),
+    segment-reduce per target — DGL's ``u_mul_e_{sum,max,mean}`` gSpMM
+    shape.  The multiply and the segmented combine run in ONE Pallas
+    pass over the edge stream ([BLK_S, K·F] VMEM tiles, partitions
+    major / features minor on the lane axis), so the weighted message
+    stream is never materialised to HBM between them.  ``gspmm_ref`` is
+    the unfused XLA scatter reference (and the shard_map-path
+    implementation).
+
 ``masked_update``
     The frontier/replica-update step of the exchange: replicated slots take
     the exchanged (cut-combined) value, private slots keep their local
     value, padding slots are pinned to the identity.  Mirrors the masked
     [K, V]-tile style of kernels/frontier_min.py.
 
-Both support combine ∈ {"min", "add"} (SSSP/WCC vs PageRank) and run in
-interpret mode on CPU.
+All support combine ∈ {"min", "add", "max"} (SSSP/WCC, PageRank, GNN
+max-pooling) and run in interpret mode on CPU.  ``segment_reduce``,
+``segment_reduce_ref`` and ``masked_update`` accept either scalar
+[K, ·] streams or [K, ·, F] feature planes — the F axis is folded onto
+the 128-wide lane axis, so scalar programs are literally the F=1 case
+of the same kernels.
 
 The message stream is per-half-edge, so weighted programs need no kernel
 changes: the runtime applies the ``EdgeProgram.edge`` hook (e.g.
@@ -41,14 +56,27 @@ compiled gather serves every in-place plan patch.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-_IDENTITY = {"min": jnp.inf, "add": 0.0}
-_OPS = {"min": jnp.minimum, "add": jnp.add}
+_IDENTITY = {"min": jnp.inf, "add": 0.0, "max": -jnp.inf}
+_OPS = {"min": jnp.minimum, "add": jnp.add, "max": jnp.maximum}
+
+
+def _scatter_combine(tgt: jax.Array, rows: jax.Array, cols: jax.Array,
+                     vals: jax.Array, combine: str) -> jax.Array:
+    """Scatter-combine ``vals`` into ``tgt[rows, cols]`` (identity-masked
+    values are inert for every combine: inf/min, 0/add, -inf/max)."""
+    at = tgt.at[rows, cols]
+    if combine == "min":
+        return at.min(vals)
+    if combine == "max":
+        return at.max(vals)
+    return at.add(vals)
 
 
 def _seg_kernel(flags_ref, vals_ref, o_ref, carry_ref, *, combine: str):
@@ -109,31 +137,37 @@ def segment_reduce(plan, messages: jax.Array, combine: str = "min",
                    block_s: int = 1024, interpret: bool = True) -> jax.Array:
     """Per-target aggregates over the plan's CSR stream.
 
-    messages [K, Emax] (identity at masked slots) -> aggregates [K, Vmax]
-    (identity at padding vertices).
+    messages [K, Emax] or [K, Emax, F] (identity at masked slots) ->
+    aggregates [K, Vmax] / [K, Vmax, F] (identity at padding vertices).
+    Feature planes fold onto the lane axis (partition-major,
+    feature-minor), so the scalar case is exactly F=1 of the same scan.
 
     Slack-aware bounds: the segmented scan covers only the sorted CSR prefix
     ``[0, csr_fill)`` of each lane; half-edges appended by the streaming
     patch path live in ``[csr_fill, e_max)`` in arbitrary order, so their
     contribution is combined by a masked scatter on top of the scanned
     aggregate.  Masked (deleted/padding) slots are pinned to the combine
-    identity in both regions and are therefore inert for min and add alike.
+    identity in both regions and are therefore inert for every combine.
     """
     ident = _IDENTITY[combine]
-    slot = jnp.arange(plan.emask.shape[1], dtype=jnp.int32)[None, :]
+    squeeze = messages.ndim == 2
+    msgs3 = messages[:, :, None] if squeeze else messages       # [K, Emax, F]
+    k, e_max, f = msgs3.shape
+    slot = jnp.arange(e_max, dtype=jnp.int32)[None, :]
     in_csr = slot < plan.csr_fill[:, None]                          # [K, Emax]
-    msgs = jnp.where(plan.emask & in_csr, messages, ident)
-    scanned = segment_scan(plan.seg_start.T, msgs.T, combine=combine,
-                           block_s=block_s, interpret=interpret).T  # [K, Emax]
-    rows = jnp.arange(plan.emask.shape[0], dtype=jnp.int32)[:, None]
-    agg = scanned[rows, plan.last_slot]                             # [K, Vmax]
+    msgs = jnp.where((plan.emask & in_csr)[:, :, None], msgs3, ident)
+    stream = msgs.transpose(1, 0, 2).reshape(e_max, k * f)       # [Emax, K·F]
+    flags = jnp.repeat(plan.seg_start.T, f, axis=1)
+    scanned = segment_scan(flags, stream, combine=combine,
+                           block_s=block_s, interpret=interpret)
+    scanned = scanned.reshape(e_max, k, f).transpose(1, 0, 2)    # [K, Emax, F]
+    rows = jnp.arange(k, dtype=jnp.int32)[:, None]
+    agg = scanned[rows, plan.last_slot]                          # [K, Vmax, F]
     # append-region contributions (each appended half-edge is one segment)
-    slack = jnp.where(plan.emask & ~in_csr, messages, ident)
-    if combine == "min":
-        agg = agg.at[rows, plan.edge_tgt].min(slack)
-    else:  # add identity is 0.0, so the masked scatter is exact
-        agg = agg.at[rows, plan.edge_tgt].add(slack)
-    return jnp.where(plan.vmask, agg, ident)
+    slack = jnp.where((plan.emask & ~in_csr)[:, :, None], msgs3, ident)
+    agg = _scatter_combine(agg, rows, plan.edge_tgt, slack, combine)
+    agg = jnp.where(plan.vmask[:, :, None], agg, ident)
+    return agg[:, :, 0] if squeeze else agg
 
 
 def gather_vertex_channel(plan, values: jax.Array) -> jax.Array:
@@ -180,16 +214,181 @@ def gather_edge_channel(plan, values: jax.Array, fill: float = 0.0
 
 def segment_reduce_ref(plan, messages: jax.Array,
                        combine: str = "min") -> jax.Array:
-    """XLA scatter reference (also the shard_map-path implementation)."""
+    """XLA scatter reference (also the shard_map-path implementation).
+
+    Accepts [K, Emax] or [K, Emax, F] messages like :func:`segment_reduce`.
+    """
     ident = _IDENTITY[combine]
-    msgs = jnp.where(plan.emask, messages, ident)
-    rows = jnp.arange(plan.edge_tgt.shape[0], dtype=jnp.int32)[:, None]
-    out = jnp.full((plan.edge_tgt.shape[0], plan.v_max), ident, jnp.float32)
-    if combine == "min":
-        out = out.at[rows, plan.edge_tgt].min(msgs)
-    else:  # msgs already masked to the add identity 0.0
-        out = out.at[rows, plan.edge_tgt].add(msgs)
-    return jnp.where(plan.vmask, out, ident)
+    squeeze = messages.ndim == 2
+    msgs3 = messages[:, :, None] if squeeze else messages
+    msgs = jnp.where(plan.emask[:, :, None], msgs3, ident)
+    k = plan.edge_tgt.shape[0]
+    rows = jnp.arange(k, dtype=jnp.int32)[:, None]
+    out = jnp.full((k, plan.v_max, msgs3.shape[2]), ident, jnp.float32)
+    out = _scatter_combine(out, rows, plan.edge_tgt, msgs, combine)
+    out = jnp.where(plan.vmask[:, :, None], out, ident)
+    return out[:, :, 0] if squeeze else out
+
+
+def _gspmm_kernel(flags_ref, mask_ref, w_ref, vals_ref, o_ref, carry_ref, *,
+                  combine: str, features: int):
+    """Fused multiply + segmented combine over one [BLK_S, K·F] tile.
+
+    ``flags``/``mask``/scalar ``w`` arrive K-wide and are broadcast to the
+    K·F lane layout in VMEM (features minor); per-feature weight planes
+    arrive K·F-wide already.  The weighted message x = v·w is formed and
+    identity-masked inside the kernel — the weighted stream never exists
+    in HBM.
+    """
+    op = _OPS[combine]
+    ident = jnp.float32(_IDENTITY[combine])
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.full_like(carry_ref, ident)
+
+    fl = jnp.repeat(flags_ref[...], features, axis=1)     # [BLK_S, K·F]
+    ok = jnp.repeat(mask_ref[...], features, axis=1)
+    w = w_ref[...]
+    if w.shape[1] != fl.shape[1]:       # scalar per-half-edge weights
+        w = jnp.repeat(w, features, axis=1)
+    # multiply BEFORE masking: a dead slot's weight can never rescue it,
+    # and the identity (±inf for min/max) is never multiplied by 0
+    x = jnp.where(ok, vals_ref[...] * w, ident)
+
+    def comb(a, b):
+        af, av = a
+        bf, bv = b
+        return af | bf, jnp.where(bf, bv, op(av, bv))
+
+    f_scan, v_scan = jax.lax.associative_scan(comb, (fl, x), axis=0)
+    out = jnp.where(f_scan, v_scan, op(carry_ref[...], v_scan))
+    o_ref[...] = out
+    carry_ref[...] = out[-1:, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("combine", "block_s", "interpret"))
+def _gspmm_scan(flags: jax.Array, mask: jax.Array, w: jax.Array,
+                vals: jax.Array, combine: str, block_s: int,
+                interpret: bool) -> jax.Array:
+    """Segmented scan of masked v·w streams: flags/mask [S, K] bool,
+    w [S, K] or [S, K·F], vals [S, K·F] -> scanned [S, K·F]."""
+    s, kf = vals.shape
+    k = flags.shape[1]
+    f = kf // k
+    ident = _IDENTITY[combine]
+    s_pad = -(-s // block_s) * block_s
+    fp = jnp.zeros((s_pad, k), jnp.bool_).at[:s].set(flags)
+    mp = jnp.zeros((s_pad, k), jnp.bool_).at[:s].set(mask)
+    wp = jnp.zeros((s_pad, w.shape[1]), jnp.float32).at[:s].set(w)
+    vp = jnp.zeros((s_pad, kf), jnp.float32).at[:s].set(vals)
+    out = pl.pallas_call(
+        functools.partial(_gspmm_kernel, combine=combine, features=f),
+        grid=(s_pad // block_s,),
+        in_specs=[pl.BlockSpec((block_s, k), lambda i: (i, 0)),
+                  pl.BlockSpec((block_s, k), lambda i: (i, 0)),
+                  pl.BlockSpec((block_s, w.shape[1]), lambda i: (i, 0)),
+                  pl.BlockSpec((block_s, kf), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_s, kf), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_pad, kf), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, kf), jnp.float32)],
+        interpret=interpret,
+    )(fp, mp, wp, vp)
+    return out[:s]
+
+
+def _pad_k(x: jax.Array, k_pad: int, fill) -> jax.Array:
+    """Pad the leading partition axis to ``k_pad`` lanes with ``fill``."""
+    k = x.shape[0]
+    if k_pad == k:
+        return x
+    pad = jnp.full((k_pad - k,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=0)
+
+
+def gspmm(plan, feats: jax.Array, weights: jax.Array, combine: str = "add",
+          *, block_s: int = 1024, interpret: bool = True) -> jax.Array:
+    """Fused gSpMM: gather · multiply · segment-reduce in one kernel pass.
+
+    DGL's ``u_mul_e_{sum,max,mean}`` shape on the partition-local layout:
+
+    feats   [K, Vmax, F] (or [K, Vmax]) local feature rows, e.g. from
+            :func:`gather_vertex_channel` or a program's ``pre``;
+    weights [K, Emax] scalar per-half-edge (``plan.edge_w``) or
+            [K, Emax, F] per-feature planes (a bound edge channel);
+    combine "add"/"sum", "max", or "mean" (sum / clamped live-degree,
+            isolated vertices aggregate to 0)
+    -> [K, Vmax, F] per-target aggregates, identity at padding slots.
+
+    The neighbour gather reuses the slack-aware ``plan.edge_nbr`` indices
+    (maintained by the streaming patch path), the CSR prefix flows through
+    ONE fused Pallas multiply+scan pass, and append-region half-edges are
+    folded in by the same masked scatter as :func:`segment_reduce` — so
+    the result is exact under in-place plan patches.  Partitions are
+    padded so K·F stays a multiple of the 128-lane tile.
+    """
+    if combine == "sum":
+        combine = "add"
+    if combine == "mean":
+        s = gspmm(plan, feats, weights, "add", block_s=block_s,
+                  interpret=interpret)
+        cnt = segment_reduce(plan, jnp.ones(plan.emask.shape, jnp.float32),
+                             "add", block_s=block_s, interpret=interpret)
+        return s / jnp.maximum(cnt, 1.0)[:, :, None]
+    if feats.ndim == 2:
+        feats = feats[:, :, None]
+    k, e_max = plan.emask.shape
+    f = feats.shape[2]
+    ident = _IDENTITY[combine]
+    rows = jnp.arange(k, dtype=jnp.int32)[:, None]
+    msgs = feats[rows, plan.edge_nbr]                       # [K, Emax, F]
+    w3 = weights[:, :, None] if weights.ndim == 2 else weights
+    slot = jnp.arange(e_max, dtype=jnp.int32)[None, :]
+    in_csr = slot < plan.csr_fill[:, None]
+    live = plan.emask & in_csr
+    # lane padding: k_pad·F a multiple of 128 so the folded lane axis tiles
+    step = 128 // math.gcd(f, 128)
+    k_pad = -(-k // step) * step
+    flags = _pad_k(plan.seg_start, k_pad, False).T          # [Emax, k_pad]
+    maskt = _pad_k(live, k_pad, False).T
+    vals = _pad_k(msgs, k_pad, 0.0).transpose(1, 0, 2).reshape(
+        e_max, k_pad * f)
+    if weights.ndim == 2:
+        wop = _pad_k(weights, k_pad, 0.0).T                 # [Emax, k_pad]
+    else:
+        wop = _pad_k(w3, k_pad, 0.0).transpose(1, 0, 2).reshape(
+            e_max, k_pad * f)
+    scanned = _gspmm_scan(flags, maskt, wop, vals, combine=combine,
+                          block_s=block_s, interpret=interpret)
+    scanned = scanned.reshape(e_max, k_pad, f).transpose(1, 0, 2)[:k]
+    agg = scanned[rows, plan.last_slot]                     # [K, Vmax, F]
+    # append-region half-edges: weighted outside the kernel (the region is
+    # a small bounded slack), combined by the same masked scatter
+    slack = jnp.where((plan.emask & ~in_csr)[:, :, None], msgs * w3, ident)
+    agg = _scatter_combine(agg, rows, plan.edge_tgt, slack, combine)
+    return jnp.where(plan.vmask[:, :, None], agg, ident)
+
+
+def gspmm_ref(plan, feats: jax.Array, weights: jax.Array,
+              combine: str = "add") -> jax.Array:
+    """Unfused XLA reference for :func:`gspmm`: gather, materialise the
+    weighted message stream, scatter segment-reduce (also the
+    shard_map-path implementation)."""
+    if combine == "sum":
+        combine = "add"
+    if combine == "mean":
+        s = gspmm_ref(plan, feats, weights, "add")
+        cnt = segment_reduce_ref(plan, jnp.ones(plan.emask.shape,
+                                                jnp.float32), "add")
+        return s / jnp.maximum(cnt, 1.0)[:, :, None]
+    if feats.ndim == 2:
+        feats = feats[:, :, None]
+    rows = jnp.arange(plan.emask.shape[0], dtype=jnp.int32)[:, None]
+    msgs = feats[rows, plan.edge_nbr]
+    w3 = weights[:, :, None] if weights.ndim == 2 else weights
+    return segment_reduce_ref(plan, msgs * w3, combine)
 
 
 def _update_kernel(state_ref, inc_ref, vmask_ref, rep_ref, o_ref, *,
@@ -206,7 +405,18 @@ def _update_kernel(state_ref, inc_ref, vmask_ref, rep_ref, o_ref, *,
 def masked_update(state: jax.Array, incoming: jax.Array, vmask: jax.Array,
                   replicated: jax.Array, combine: str = "min",
                   block_v: int = 2048, interpret: bool = True) -> jax.Array:
-    """Apply exchanged values to replicated slots: state/incoming [K, Vmax]."""
+    """Apply exchanged values to replicated slots: state/incoming [K, Vmax]
+    or [K, Vmax, F] (the feature axis folds onto the slot axis — masks are
+    per-vertex, so they broadcast by repetition)."""
+    if state.ndim == 3:
+        k, v, f = state.shape
+        out = masked_update(state.reshape(k, v * f),
+                            incoming.reshape(k, v * f),
+                            jnp.repeat(vmask, f, axis=1),
+                            jnp.repeat(replicated, f, axis=1),
+                            combine=combine, block_v=block_v,
+                            interpret=interpret)
+        return out.reshape(k, v, f)
     k, v = state.shape
     ident = _IDENTITY[combine]
     k_pad = -(-k // 8) * 8

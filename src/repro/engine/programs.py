@@ -15,7 +15,14 @@ whole-graph oracles in ``core/algorithms.py``:
                  (vertex property channel; bit-identical to
                  ``reference_label_propagation``),
   * ppr        — personalized PageRank with an external teleport vector
-                 (vertex property channel + degree resource).
+                 (vertex property channel + degree resource),
+  * gcn_layer  — one GCN layer forward pass over [V, F] feature planes:
+                 ``out = (D^{-1/2} A_w D^{-1/2} X) W`` with a bound weight
+                 matrix (dense channel), flowing through the fused Pallas
+                 gSpMM via the ``edge_mul`` hook (vector state,
+                 ``StateSpec(features=F_out)``),
+  * kge_score  — DistMult-style triple scoring over bound entity/relation
+                 embedding channels, accumulated per vertex.
 
 Programs are module-level constants (static jit arguments); per-query
 values (source vertex, degree vector) travel in the traced ``ctx`` dict.
@@ -43,6 +50,7 @@ from . import registry
 from .kernels import gather_edge_channel, gather_vertex_channel
 from .plan import PartitionPlan
 from .runtime import EdgeProgram, Engine, EngineResult
+from .state import StateSpec
 
 INF = jnp.float32(jnp.inf)
 DAMPING = 0.85
@@ -293,6 +301,100 @@ PPR = EdgeProgram(
 
 
 # ---------------------------------------------------------------------------
+# GCN layer — the vector-state flagship: one graph-convolution forward pass
+# ``out = (D^{-1/2} A_w D^{-1/2} X) W`` over the plan's content-hash edge
+# weights.  State is a [K, Vmax, F_in] feature plane; the sweep runs the
+# fused Pallas gSpMM (``edge_mul`` hook: gather · multiply-by-edge_w ·
+# segment-reduce in one kernel pass); the bound [F_in, F_out] weight matrix
+# (dense channel) applies once at finalize.  Feature widths are static per
+# registration — like a deployed model's layer shapes — so every query jits
+# to one cache entry.
+# ---------------------------------------------------------------------------
+
+GCN_F_IN = 8
+GCN_F_OUT = 4
+
+
+def _gcn_prepare(plan, kw):
+    inv_sqrt = 1.0 / jnp.sqrt(jnp.maximum(
+        kw["degrees"].astype(jnp.float32), 1.0))
+    return {"x_local": gather_vertex_channel(plan, kw["x"]),
+            "inv_sqrt_local": jnp.where(
+                plan.vmask, inv_sqrt[plan.local2global], 0.0)[:, :, None],
+            "weight": kw["weight"]}
+
+
+def _gcn_init(plan, ctx):
+    return ctx["x_local"]           # already vmask-pinned to zero rows
+
+
+def _gcn_pre(state, ctx):
+    return state * ctx["inv_sqrt_local"]
+
+
+def _gcn_edge_mul(plan, ctx):
+    return plan.edge_w
+
+
+def _gcn_apply(old, agg, ctx):
+    return agg * ctx["inv_sqrt_local"]
+
+
+def _gcn_finalize(glob, present, plan, ctx):
+    h = jnp.where(present[:, None], glob, 0.0)
+    return jnp.dot(h, ctx["weight"])
+
+
+GCN_LAYER = EdgeProgram(
+    name="gcn_layer", mode="partial", combine="add",
+    prepare=_gcn_prepare, init=_gcn_init, pre=_gcn_pre,
+    apply=_gcn_apply, finalize=_gcn_finalize,
+    local_fixpoint=False, default_supersteps=1,
+    edge_mul=_gcn_edge_mul, state=StateSpec(features=GCN_F_OUT, fill=0.0))
+
+
+# ---------------------------------------------------------------------------
+# KGE triple scoring — DistMult interaction over bound embedding channels:
+# every live edge e = (u, v) scores sum_f ent_u[f]·rel_e[f]·ent_v[f] and the
+# score accumulates onto both endpoints.  The relation plane is an EDGE
+# channel in graph slot order (slack-aware gather: patched-in edges without
+# covered slots score 0); the per-feature ``edge_mul`` planes drive the
+# fused gSpMM with [K, Emax, F] weights.  Scalar [V] result state.
+# ---------------------------------------------------------------------------
+
+KGE_F = 8
+
+
+def _kge_prepare(plan, kw):
+    return {"ent_local": gather_vertex_channel(plan, kw["entity"]),
+            "rel_local": gather_edge_channel(plan, kw["relation"], fill=0.0)}
+
+
+def _kge_init(plan, ctx):
+    return ctx["ent_local"]
+
+
+def _kge_edge_mul(plan, ctx):
+    return ctx["rel_local"]
+
+
+def _kge_apply(old, agg, ctx):
+    return ctx["ent_local"] * agg
+
+
+def _kge_finalize(glob, present, plan, ctx):
+    return jnp.where(present, jnp.sum(glob, axis=1), 0.0)
+
+
+KGE_SCORE = EdgeProgram(
+    name="kge_score", mode="partial", combine="add",
+    prepare=_kge_prepare, init=_kge_init, pre=_ident_pre,
+    apply=_kge_apply, finalize=_kge_finalize,
+    local_fixpoint=False, default_supersteps=1,
+    edge_mul=_kge_edge_mul, state=StateSpec(fill=0.0))
+
+
+# ---------------------------------------------------------------------------
 # Convenience entry points
 # ---------------------------------------------------------------------------
 
@@ -335,6 +437,21 @@ def engine_personalized_pagerank(engine: Engine, degrees: jax.Array,
     return engine.run(PPR, max_supersteps=iters, degrees=degrees,
                       personalization=jnp.asarray(personalization,
                                                   jnp.float32))
+
+
+def engine_gcn_layer(engine: Engine, degrees: jax.Array, x,
+                     weight) -> EngineResult:
+    """One GCN layer forward pass; ``result.state`` is [V, GCN_F_OUT]."""
+    return engine.run(GCN_LAYER, degrees=degrees,
+                      x=jnp.asarray(x, jnp.float32),
+                      weight=jnp.asarray(weight, jnp.float32))
+
+
+def engine_kge_score(engine: Engine, entity, relation) -> EngineResult:
+    """Per-vertex DistMult triple-score mass; ``result.state`` is [V]."""
+    return engine.run(KGE_SCORE,
+                      entity=jnp.asarray(entity, jnp.float32),
+                      relation=jnp.asarray(relation, jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -401,5 +518,40 @@ registry.register(
     oracle=lambda g, personalization, iters: np.asarray(
         _alg.reference_personalized_pagerank(g, np.asarray(personalization),
                                              iters=iters)),
+    oracle_atol=1e-5,
+)
+
+
+def _gcn_weight_rows(cv):
+    # the dense channel's plan-free shape still has a program contract:
+    # rows must match the layer's input width or the finalize matmul
+    # would fail deep inside jit instead of at the server door
+    if cv.shape[0] != GCN_F_IN:
+        raise ValueError(
+            f"gcn_layer.weight is the [F_in, F_out] = "
+            f"[{GCN_F_IN}, {GCN_F_OUT}] layer matrix, got {cv.shape}")
+
+
+registry.register(
+    "gcn_layer", GCN_LAYER,
+    params=[registry.ParamSpec("x", float, role="channel",
+                               channel="vertex", features=GCN_F_IN),
+            registry.ParamSpec("weight", float, role="channel",
+                               channel="dense", features=GCN_F_OUT,
+                               validate=_gcn_weight_rows)],
+    resources={"degrees": lambda g: g.degrees()},
+    oracle=lambda g, x, weight: _alg.reference_gcn_layer(
+        g, np.asarray(x), np.asarray(weight)),
+    oracle_atol=1e-5,
+)
+
+registry.register(
+    "kge_score", KGE_SCORE,
+    params=[registry.ParamSpec("entity", float, role="channel",
+                               channel="vertex", features=KGE_F),
+            registry.ParamSpec("relation", float, role="channel",
+                               channel="edge", features=KGE_F)],
+    oracle=lambda g, entity, relation: _alg.reference_kge_score(
+        g, np.asarray(entity), np.asarray(relation)),
     oracle_atol=1e-5,
 )

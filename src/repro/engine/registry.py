@@ -42,21 +42,28 @@ personalized PageRank register this way (engine/programs.py).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
 import numbers
+import threading
 from typing import Any, Callable, Mapping
 
+import jax
 import numpy as np
 
+from .. import obs as _obs
 from .errors import (BatchAxisError, ChannelError, DuplicateProgramError,
                      ParamTypeError, RegistryError, UnknownParamError,
                      UnknownProgramError)
+from .state import SCALAR, StateSpec
 
 _REQUIRED = object()        # sentinel: ParamSpec without a default
 _DTYPES = (int, float)
 _ROLES = ("ctx", "supersteps", "channel")
-_CHANNELS = ("vertex", "edge")
+_CHANNELS = ("vertex", "edge", "dense")
+_CHANNEL_SHAPES = {"vertex": "[V, F]", "edge": "[E_pad, F]",
+                   "dense": "[R, F]"}
 
 
 class ChannelValue:
@@ -139,12 +146,15 @@ class ParamSpec:
                  property plane (see below).
     validate   — optional callback run on the coerced value; raise
                  ``ValueError`` to reject.
-    channel    — for role="channel": "vertex" (a global ``[V, F]`` plane)
-                 or "edge" (an ``[E_pad, F]`` plane in graph edge-slot
-                 order).  Values arrive as arrays (or pre-built
+    channel    — for role="channel": "vertex" (a global ``[V, F]`` plane),
+                 "edge" (an ``[E_pad, F]`` plane in graph edge-slot
+                 order), or "dense" (a free-shape ``[R, F]`` operand tied
+                 to no plan axis — e.g. a ``[F_in, F_out]`` GNN weight
+                 matrix).  Values arrive as arrays (or pre-built
                  ``ChannelValue``); they are content-hashed into batch and
                  cache keys and laid out against the partition plan by
-                 ``ProgramEntry.channel_args`` at dispatch.
+                 ``ProgramEntry.channel_args`` at dispatch (dense planes
+                 pass through untouched).
     features   — declared feature width F of a channel plane (static, so
                  every query of the program jits to one cache entry).
     """
@@ -200,7 +210,7 @@ class ParamSpec:
             raise ChannelError(
                 f"{program}.{self.name} is a {self.channel} property "
                 f"channel and takes an array plane "
-                f"({'[V, F]' if self.channel == 'vertex' else '[E_pad, F]'}"
+                f"({_CHANNEL_SHAPES[self.channel]}"
                 f" with F={self.features}), got a scalar "
                 f"{type(value).__name__}")
         cv = value if isinstance(value, ChannelValue) else ChannelValue(value)
@@ -212,6 +222,64 @@ class ParamSpec:
         if self.validate is not None:
             self.validate(cv)
         return cv
+
+
+class _ResidentPlanes:
+    """Device residency for channel planes, keyed by content digest.
+
+    PR 5 left bound planes host-side: every dispatch re-uploaded the same
+    ``[V, F]`` array through ``jnp.asarray``.  ``channel_args`` now routes
+    planes through this LRU — the first dispatch of a digest pays one
+    ``jax.device_put`` (uncommitted, so mesh paths reshard freely) and
+    every later dispatch, including across stream patches that leave the
+    plane unchanged, reuses the resident buffer (``jnp.asarray`` on a jax
+    array is a no-op).  Keyed by (digest, padded rows) because an edge
+    plane's zero-padding to ``plan.e_slots`` is part of the uploaded
+    bytes.  Size and hit/miss counts surface as the ``channels.*`` obs
+    gauges so fig_obs can watch residency.
+    """
+
+    def __init__(self, capacity: int = 64):
+        self._lock = threading.Lock()
+        self._planes: collections.OrderedDict = collections.OrderedDict()
+        self._bytes = 0
+        self._capacity = capacity
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, digest: str, vals: np.ndarray):
+        key = (digest, vals.shape[0])
+        with self._lock:
+            arr = self._planes.get(key)
+            if arr is not None:
+                self._planes.move_to_end(key)
+                self.hits += 1
+                return arr
+            self.misses += 1
+            arr = jax.device_put(vals)      # uncommitted: no device pinning
+            self._planes[key] = arr
+            self._bytes += int(vals.nbytes)
+            while len(self._planes) > self._capacity:
+                _, old = self._planes.popitem(last=False)
+                self._bytes -= int(old.size * old.dtype.itemsize)
+            total = self._bytes
+        _obs.get().gauge("channels.resident_bytes", total)
+        return arr
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"resident_bytes": self._bytes,
+                    "planes": len(self._planes),
+                    "hits": self.hits, "misses": self.misses}
+
+
+_RESIDENT = _ResidentPlanes()
+_obs.get().register_provider("channels", _RESIDENT.stats)
+
+
+def resident_stats() -> dict:
+    """Snapshot of the device-resident channel-plane cache."""
+    return _RESIDENT.stats()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,6 +318,14 @@ class ProgramEntry:
     @property
     def channel_params(self) -> tuple[ParamSpec, ...]:
         return tuple(p for p in self.params if p.role == "channel")
+
+    @property
+    def state(self) -> StateSpec:
+        """The program's declared per-vertex state shape.  Everything
+        downstream (engine warm checks, gserve warm store and cold rows,
+        result materialisation) derives shapes from this one property;
+        programs predating the spec read as scalar."""
+        return getattr(self.program, "state", SCALAR)
 
     def spec(self, name: str) -> ParamSpec:
         for p in self.params:
@@ -338,6 +414,11 @@ class ProgramEntry:
             if not isinstance(cv, ChannelValue):    # direct engine users
                 cv = spec.coerce(self.name, cv)
             n = cv.values.shape[0]
+            if spec.channel == "dense":
+                # free-shape operand: no plan axis to agree with — rank and
+                # feature width were already enforced at coercion
+                out[spec.name] = cv
+                continue
             if spec.channel == "vertex":
                 if n != plan.n_vertices:
                     raise ChannelError(
@@ -368,6 +449,10 @@ class ProgramEntry:
         Validates via ``validate_channels``; edge planes shorter than the
         plan's static slot capacity (e.g. exactly ``[E, F]`` on a freshly
         built graph) are zero-padded up to it so jit caches stay warm.
+
+        Returned planes are *device-resident*: each (digest, rows) pair is
+        uploaded once through the process-wide ``_ResidentPlanes`` LRU and
+        reused across dispatches and stream patches.
         """
         out: dict[str, Any] = {}
         for spec, cv in zip(self.channel_params,
@@ -377,7 +462,7 @@ class ProgramEntry:
                 pad = np.zeros((plan.e_slots - vals.shape[0],
                                 vals.shape[1]), np.float32)
                 vals = np.concatenate([vals, pad], axis=0)
-            out[spec.name] = vals
+            out[spec.name] = _RESIDENT.get(cv.digest, vals)
         return out
 
     def batch_key_of(self, params: Mapping[str, Any]) -> tuple:

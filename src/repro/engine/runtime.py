@@ -52,6 +52,7 @@ from .. import obs as _obs
 from . import kernels
 from .errors import WarmStateError
 from .plan import PartitionPlan
+from .state import SCALAR, StateSpec
 
 # Trace accounting: _run_loop's Python body executes only while jax traces
 # (i.e. on a jit-cache miss), so this counter counts compilations, not calls.
@@ -79,34 +80,53 @@ class EdgeProgram(NamedTuple):
     mode "partial": local sweeps produce partial aggregates that sum across
                     partitions (combine = add); ``apply`` runs after the
                     exchange completes the aggregate.
+
+    State rank is declarative (PR 10): ``state`` is the program's
+    :class:`~repro.engine.state.StateSpec`.  With the default scalar spec
+    every hook sees/returns [K, Vmax] blocks and the finalized result is
+    [V] — bit-identical to the pre-StateSpec path.  With
+    ``StateSpec(features=F)`` the same hooks carry [K, Vmax, F] planes
+    and finalize to [V, F]; the engine, warm store and serving layers
+    derive every shape from the spec, no per-rank branching anywhere.
     """
     name: str
     mode: str                       # "replica" | "partial"
-    combine: str                    # "min" | "add"
+    combine: str                    # "min" | "add" | "max"
     prepare: Callable               # (plan, kw) -> ctx dict (traced, once)
-    init: Callable                  # (plan, ctx) -> [K, Vmax] state
+    init: Callable                  # (plan, ctx) -> [K, Vmax(, F)] state
     pre: Callable                   # (state, ctx) -> per-vertex msg values
     apply: Callable                 # (old, agg, ctx) -> new
-    finalize: Callable              # (glob [V], present [V], plan, ctx) -> [V]
+    finalize: Callable              # (glob [V(, F)], present [V], plan, ctx)
+                                    #   -> [V(, F)]
     local_fixpoint: bool = True
     default_supersteps: int | None = None   # None -> run to fixed point
     # optional hooks (None: disabled)
-    edge: Callable | None = None    # (msgs [K, Emax], plan, ctx) -> msgs —
-                                    #   per-half-edge transform applied after
-                                    #   the neighbour gather, before the
-                                    #   segment reduce (e.g. + plan.edge_w)
+    edge: Callable | None = None    # (msgs [K, Emax(, F)], plan, ctx) -> msgs
+                                    #   — per-half-edge transform applied
+                                    #   after the neighbour gather, before
+                                    #   the segment reduce (e.g. + plan.edge_w)
     warm_init: Callable | None = None
-                                    # (plan, prev [V], ctx) -> [K, Vmax] —
-                                    #   warm-start state from a previous
-                                    #   epoch's *finalized* result. +inf
-                                    #   entries of prev mean "no prior
-                                    #   information" and must reduce to the
-                                    #   cold init value for that vertex.
+                                    # (plan, prev [V(, F)], ctx) ->
+                                    #   [K, Vmax(, F)] — warm-start state from
+                                    #   a previous epoch's *finalized* result.
+                                    #   ``state.fill`` entries of prev mean
+                                    #   "no prior information" and must reduce
+                                    #   to the cold init value for that vertex.
+    edge_mul: Callable | None = None
+                                    # (plan, ctx) -> [K, Emax] or [K, Emax, F]
+                                    #   multiplicative per-half-edge weights;
+                                    #   routes the sweep through the fused
+                                    #   Pallas gSpMM (gather · multiply ·
+                                    #   segment-reduce in one kernel pass)
+                                    #   instead of the edge hook + plain
+                                    #   segment reduce
+    state: StateSpec = SCALAR       # per-vertex state shape declaration
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineResult:
-    state: jax.Array                # [V] global vertex state
+    state: jax.Array                # [V(, F)] global vertex state (rank per
+                                    #   the program's StateSpec)
     supersteps: jax.Array           # int32 — the paper's "rounds"
     local_iters: jax.Array          # int32 — local sweeps on the critical path
     converged: jax.Array            # bool — False iff the superstep cap was
@@ -174,10 +194,25 @@ def _rows(arr: jax.Array) -> jax.Array:
     return jnp.arange(arr.shape[0], dtype=jnp.int32)[:, None]
 
 
+def _expand(mask: jax.Array, ref: jax.Array) -> jax.Array:
+    """Broadcast a [K, Vmax] mask against scalar or feature-plane state —
+    the one shape-polymorphism point the superstep loop needs: everything
+    else is rank-generic indexing/reshapes driven by the data."""
+    return mask[:, :, None] if ref.ndim == 3 else mask
+
+
 def _sweep(plan, prog, state, ctx, *, use_pallas: bool, interpret: bool):
-    """One Gather-Apply sweep: returns the per-target aggregate [K, Vmax]."""
-    pre = prog.pre(state, ctx)                              # [K, Vmax]
-    msgs = pre[_rows(plan.edge_nbr), plan.edge_nbr]         # [K, Emax]
+    """One Gather-Apply sweep: per-target aggregate [K, Vmax(, F)]."""
+    pre = prog.pre(state, ctx)                              # [K, Vmax(, F)]
+    if prog.edge_mul is not None:   # fused gSpMM path (GNN programs)
+        w = prog.edge_mul(plan, ctx)
+        if use_pallas:
+            agg = kernels.gspmm(plan, pre, w, prog.combine,
+                                interpret=interpret)
+        else:
+            agg = kernels.gspmm_ref(plan, pre, w, prog.combine)
+        return agg[:, :, 0] if pre.ndim == 2 else agg
+    msgs = pre[_rows(plan.edge_nbr), plan.edge_nbr]         # [K, Emax(, F)]
     if prog.edge is not None:   # per-half-edge hook (weighted programs)
         msgs = prog.edge(msgs, plan, ctx)
     if use_pallas:
@@ -190,34 +225,44 @@ def _exchange(plan, values, combine, axis: str | None, *,
               use_pallas: bool, interpret: bool):
     """Combine replicated slots across partitions; private slots unchanged.
 
-    values [K, Vmax] -> [K, Vmax]. With ``axis`` set (shard_map body) the
-    cross-device combine is a psum/pmin over the mesh axis.
+    values [K, Vmax(, F)] -> same shape. With ``axis`` set (shard_map body)
+    the cross-device combine is a psum/pmin/pmax over the mesh axis.
+    Feature planes ride the same scatter with a trailing feature axis.
     """
     ident = _ident(combine)
-    send = jnp.where(plan.vmask & plan.replicated, values, ident)
-    glob = jnp.full((plan.n_vertices,), ident, jnp.float32)
+    send = jnp.where(_expand(plan.vmask & plan.replicated, values),
+                     values, ident)
+    tail = values.shape[2:]
+    glob = jnp.full((plan.n_vertices,) + tail, ident, jnp.float32)
     flat_idx = plan.local2global.reshape(-1)
+    flat_send = send.reshape((-1,) + tail)
     if combine == "min":
-        glob = glob.at[flat_idx].min(send.reshape(-1))
+        glob = glob.at[flat_idx].min(flat_send)
         if axis is not None:
             glob = jax.lax.pmin(glob, axis)
+    elif combine == "max":
+        glob = glob.at[flat_idx].max(flat_send)
+        if axis is not None:
+            glob = jax.lax.pmax(glob, axis)
     else:  # add identity is 0.0, so the masked send scatters exactly
-        glob = glob.at[flat_idx].add(send.reshape(-1))
+        glob = glob.at[flat_idx].add(flat_send)
         if axis is not None:
             glob = jax.lax.psum(glob, axis)
-    inc = glob[plan.local2global]                           # [K, Vmax]
+    inc = glob[plan.local2global]                           # [K, Vmax(, F)]
     if use_pallas:
         return kernels.masked_update(values, inc, plan.vmask, plan.replicated,
                                      combine, interpret=interpret)
-    new = jnp.where(plan.replicated, inc, values)
-    return jnp.where(plan.vmask, new, ident)
+    new = jnp.where(_expand(plan.replicated, values), inc, values)
+    return jnp.where(_expand(plan.vmask, values), new, ident)
 
 
 def _gather_global(plan, state, axis: str | None):
-    """Master-slot scatter of the final local states to a global [V]."""
-    out = jnp.zeros((plan.n_vertices,), jnp.float32)
+    """Master-slot scatter of the final local states to a global [V(, F)]."""
+    tail = state.shape[2:]
+    out = jnp.zeros((plan.n_vertices,) + tail, jnp.float32)
     out = out.at[plan.local2global.reshape(-1)].add(
-        jnp.where(plan.is_master, state, 0.0).reshape(-1))
+        jnp.where(_expand(plan.is_master, state),
+                  state, 0.0).reshape((-1,) + tail))
     present = jnp.zeros((plan.n_vertices,), jnp.bool_)
     present = present.at[plan.local2global.reshape(-1)].max(
         plan.is_master.reshape(-1))
@@ -387,9 +432,13 @@ class Engine:
                     batch: int | None) -> jax.Array | None:
         """Validate a warm-start state (typed errors, actionable messages).
 
-        A warm state is a previous epoch's *finalized* [V] result (or a
-        [S, V] block for batched dispatch, one row per lane; +inf rows
-        mean "no prior information" and fall back to cold init).
+        A warm state is a previous epoch's *finalized* result in the
+        program's declared state shape — ``spec.shape(V)``, or the batched
+        ``spec.batch_shape(S, V)`` block with one row per lane; cold rows
+        (``spec.fill``) mean "no prior information" and fall back to cold
+        init.  A rank mismatch (scalar block for a [V, F] program or vice
+        versa) raises the same typed error as a wrong vertex count — never
+        a reshape crash inside jit.
         """
         if warm_state is None:
             return None
@@ -398,14 +447,16 @@ class Engine:
                 f"program {prog.name!r} has no warm_init hook — pass "
                 "warm_init= when constructing the EdgeProgram to enable "
                 "warm-started dispatch, or drop warm_state")
-        prev = jnp.asarray(warm_state, jnp.float32)
-        want = (self.plan.n_vertices,) if batch is None \
-            else (batch, self.plan.n_vertices)
+        spec = prog.state
+        prev = jnp.asarray(warm_state, jnp.dtype(spec.dtype))
+        want = spec.shape(self.plan.n_vertices) if batch is None \
+            else spec.batch_shape(batch, self.plan.n_vertices)
         if prev.shape != want:
             raise WarmStateError(
                 f"warm_state for program {prog.name!r} has shape "
                 f"{tuple(prev.shape)} but the plan serves "
-                f"{self.plan.n_vertices} vertices — expected {want} "
+                f"{self.plan.n_vertices} vertices with per-vertex state "
+                f"{spec.describe()} — expected {want} "
                 "(the previous epoch's finalized result state)")
         return prev
 

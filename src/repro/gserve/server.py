@@ -400,17 +400,27 @@ class GraphServer:
             return len(self._batcher)
 
     # -- micro-batch execution ----------------------------------------------
+    @staticmethod
+    def _warm_key(entry: ProgramEntry, key: tuple) -> tuple:
+        """Warm-store key: the query key prefixed with the program's
+        ``StateSpec`` identity, so a re-registered program with a different
+        per-vertex rank can never warm-start from stale planes of the old
+        shape (the runtime would reject them with ``WarmStateError``, but
+        keying them apart means they simply miss instead of erroring)."""
+        return (entry.state.key(),) + tuple(key)
+
     def _warm_block(self, entry: ProgramEntry, params0: dict,
                     padded_params: tuple, buffer: _PlanBuffer
                     ) -> tuple[np.ndarray | None, frozenset]:
-        """([bucket, V] warm-start block or None, warm lane indices) for a
-        batchable dispatch.
+        """([bucket, *state.shape(V)] warm-start block or None, warm lane
+        indices) for a batchable dispatch.
 
         Lane i warm-starts from the stored result for the same query key
         when that result's snapshot is an insert-only ancestor of the
-        buffer being dispatched against; lanes without one get +inf rows
-        ("no prior information" — the warm_init contract cold-starts them)
-        and are NOT in the returned index set. Call with the lock held."""
+        buffer being dispatched against; lanes without one get cold rows
+        from the program's ``StateSpec`` ("no prior information" — the
+        warm_init contract cold-starts them) and are NOT in the returned
+        index set. Call with the lock held."""
         if entry.program.warm_init is None or self._warm_max <= 0 \
                 or not self._warm:
             return None, frozenset()
@@ -418,7 +428,8 @@ class GraphServer:
         rows: list[np.ndarray | None] = []
         warm_lanes = set()
         for li, p in enumerate(padded_params):
-            got = self._warm.get(entry.lane_cache_key(params0, p))
+            got = self._warm.get(
+                self._warm_key(entry, entry.lane_cache_key(params0, p)))
             if got is not None and (got[0] in self._warm_ok
                                     or got[0] == fp_front):
                 rows.append(got[1])
@@ -427,7 +438,7 @@ class GraphServer:
                 rows.append(None)
         if not warm_lanes:
             return None, frozenset()
-        cold = np.full(buffer.graph.n_vertices, np.inf, np.float32)
+        cold = entry.state.cold(buffer.graph.n_vertices)
         return (np.stack([r if r is not None else cold for r in rows]),
                 frozenset(warm_lanes))
 
@@ -436,8 +447,9 @@ class GraphServer:
         """Remember the latest computed result per query key (lock held)."""
         if entry.program.warm_init is None or self._warm_max <= 0:
             return
-        self._warm[key] = (fp, value)
-        self._warm.move_to_end(key)
+        wkey = self._warm_key(entry, key)
+        self._warm[wkey] = (fp, value)
+        self._warm.move_to_end(wkey)
         while len(self._warm) > self._warm_max:
             self._warm.popitem(last=False)
 

@@ -1,0 +1,17 @@
+# analysis-virtual-path: gserve/warm.py
+"""Incident fixture — the implicit scalar-state-rank hazard.
+
+Before the ``StateSpec`` API, the serving warm store cold-filled missing
+warm-start lanes with ``np.full(buffer.graph.n_vertices, np.inf)`` —
+hard-coding one float per vertex.  The first vector-state program
+(``gcn_layer``, ``[V, F]`` per-vertex planes) would have warm-started from
+a rank-1 block and crashed in a reshape deep inside jit, lanes already
+batched, long after admission.  The fix allocates through the program
+entry's declared spec (``entry.state.cold(V)``); SR001 must flag the
+original forever."""
+import numpy as np
+
+
+def warm_block(entry, rows, buffer):
+    cold = np.full(buffer.graph.n_vertices, np.inf, np.float32)  # FLAG: SR001
+    return np.stack([r if r is not None else cold for r in rows])
